@@ -1,0 +1,400 @@
+"""Loop-aware roofline terms from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count — useless for scan-over-layers models.  This module re-derives the
+three roofline inputs directly from the optimized HLO:
+
+  * FLOPs       — every ``dot``/``convolution`` (2*M*N*K from shapes), inside
+                  fusions too, multiplied through the call graph by while-loop
+                  trip counts.
+  * HBM bytes   — post-fusion operand+output bytes of top-level instructions
+                  (fusion internals don't touch HBM; that's exactly XLA's own
+                  accounting), with the same loop multipliers.
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                  reduce-scatter / all-to-all / collective-permute.
+
+Trip counts are recovered from while-condition computations of the canonical
+``compare(get-tuple-element(param), constant)`` form; anything unrecognized
+falls back to multiplier 1 with a warning flag in the result.
+
+This is a structural estimator (dry-run profiling, no hardware): exact for
+dots, approximate for bytes (assumes every top-level operand/result is an HBM
+round trip; XLA may keep some in registers/VMEM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\([^)]*\)\s*->|{)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes inside a (possibly tuple) shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_elems(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None, 0
+    dtype, dims = m.groups()
+    n = 1
+    dd = []
+    for d in dims.split(","):
+        if d.strip():
+            dd.append(int(d))
+            n *= int(d)
+    return dd, n
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_counts: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+class _Instr:
+    __slots__ = ("name", "shape", "op", "rest")
+
+    def __init__(self, name, shape, op, rest):
+        self.name = name
+        self.shape = shape
+        self.op = op
+        self.rest = rest
+
+
+def _parse_computations(hlo: str) -> dict[str, list[_Instr]]:
+    """Computation headers sit at column 0 (`%name (args) -> ret {` possibly
+    with nested tuple parens); instructions are indented.  Indentation is the
+    reliable discriminator — regexing the arg list is not."""
+    comps: dict[str, list[_Instr]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\{)", line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            comps[cur].append(_Instr(*im.groups()))
+    return comps
+
+
+def _dot_flops(instr: _Instr, symtab: dict[str, str]) -> float:
+    """2 * prod(output dims) * K.  K from contracting dims of operand 0."""
+    out_dims, out_elems = _first_shape_elems(instr.shape)
+    if out_dims is None:
+        return 0.0
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    ops = re.findall(r"%?([\w.\-]+)", instr.rest.split("),")[0])
+    # find first operand name with a known shape
+    k = 1
+    lhs_shape = None
+    for name in re.findall(r"%([\w.\-]+)", instr.rest):
+        if name in symtab:
+            lhs_shape = symtab[name]
+            break
+    if cm and lhs_shape:
+        dims, _ = _first_shape_elems(lhs_shape)
+        if dims:
+            for ci in cm.group(1).split(","):
+                ci = ci.strip()
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(instr: _Instr, symtab: dict[str, str]) -> float:
+    out_dims, out_elems = _first_shape_elems(instr.shape)
+    if out_dims is None:
+        return 0.0
+    # approximate: 2 * out_elems * (kernel window elems * in_channels)
+    names = re.findall(r"%([\w.\-]+)", instr.rest)
+    if len(names) >= 2 and names[1] in symtab:
+        kd, ke = _first_shape_elems(symtab[names[1]])
+        if kd:
+            return 2.0 * out_elems * (ke // max(kd[-1], 1))
+    return 2.0 * out_elems
+
+
+_COLL_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SLICE_OPS = ("dynamic-slice", "gather")
+
+
+def _fusion_bytes(fname: str, comps, out_shape: str, operand_shapes: list[str]) -> float:
+    """HBM traffic of one fusion call, usage-aware:
+
+      * a parameter consumed ONLY by dynamic-slice/gather inside the body
+        contributes the SLICE bytes, not the full buffer (the residual-stack
+        gathers in scan backwards otherwise overcount by ~L x);
+      * a dynamic-update-slice whose buffer matches the fusion output is an
+        in-place RMW: neither the buffer param nor the output is traffic —
+        only the update region (counted via its own param) is;
+      * everything else: full param size; plus the output unless aliased.
+    """
+    body = comps.get(fname)
+    if body is None:
+        return _shape_bytes(out_shape) + sum(_shape_bytes(s) for s in operand_shapes)
+    param_shapes = {i.name: i.shape for i in body if i.op == "parameter"}
+    # alias map: instruction -> source param through unary pass-through chains
+    _PASS = {"bitcast", "copy", "reshape", "transpose", "convert", "broadcast"}
+    alias: dict[str, str] = {p: p for p in param_shapes}
+    for i in body:
+        if i.op in _PASS:
+            refs = re.findall(r"%([\w.\-]+)", i.rest)
+            if refs and refs[0] in alias:
+                alias[i.name] = alias[refs[0]]
+    used_full: set[str] = set()
+    sliced: dict[str, float] = {}
+    aliased: set[str] = set()
+    out_aliased = False
+    for i in body:
+        if i.op in _PASS:
+            continue  # pass-through: judged at the consuming op
+        refs = [
+            alias[r]
+            for r in re.findall(r"%([\w.\-]+)", i.rest)
+            if r in alias
+        ]
+        for r in refs:
+            if i.op in _SLICE_OPS:
+                sliced[r] = sliced.get(r, 0.0) + _shape_bytes(i.shape)
+            elif i.op == "dynamic-update-slice" and _shape_bytes(
+                param_shapes[r]
+            ) == _shape_bytes(out_shape) and _shape_bytes(out_shape) > 0:
+                aliased.add(r)
+                out_aliased = True
+            else:
+                used_full.add(r)
+    total = 0.0
+    for pname, shape in param_shapes.items():
+        if pname in used_full:
+            total += _shape_bytes(shape)
+        elif pname in sliced:
+            total += min(sliced[pname], _shape_bytes(shape))
+        # aliased / unused: 0
+    if not out_aliased:
+        total += _shape_bytes(out_shape)
+    return total
+
+_CHEAP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _trip_count(cond_name: str, comps: dict[str, list[_Instr]]) -> int | None:
+    """Recover trip count from a while condition.
+
+    Canonical post-opt form: the condition holds `constant(N)` and a fusion
+    wrapping `compare(induction, bound), direction=LT` (or a bare compare).
+    Induction starts at 0 in lax.scan lowerings, so the bound IS the trip
+    count.  With several integer constants we take the max (scan bounds
+    dominate stray 0/1 constants); unrecognized structures return None.
+    """
+    if cond_name not in comps:
+        return None
+    reach = [cond_name]
+    for ins in comps[cond_name]:
+        if ins.op.startswith("fusion"):
+            m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+            if m:
+                reach.append(m.group(1))
+    has_lt = False
+    consts: list[int] = []
+    for cname in reach:
+        for ins in comps.get(cname, []):
+            if ins.op == "compare" and "direction=LT" in ins.rest:
+                has_lt = True
+            if ins.op == "constant":
+                m = re.match(r"(-?\d+)\)", ins.rest)  # rest starts after '('
+                if m:
+                    consts.append(int(m.group(1)))
+    if has_lt and consts:
+        trips = max(consts)
+        # XLA CPU expands scatter/sort into element-wise while loops with
+        # million-scale trip counts; multiplying full-operand bytes by those
+        # produces absurd terms (observed: 2.6e9 ms "memory" on a Boruvka
+        # program).  Program-level scan/layer loops in this codebase are
+        # <= a few thousand trips; cap and let the caller flag it.
+        if trips > 100_000:
+            return None
+        return max(trips, 1)
+    return None
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = _parse_computations(hlo)
+    stats = HloStats()
+
+    # symbol table per computation: instr name -> shape string
+    symtabs = {
+        cname: {i.name: i.shape for i in instrs} for cname, instrs in comps.items()
+    }
+
+    # compute per-computation local cost, then propagate through call graph
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    def comp_cost(cname: str, depth=0) -> tuple[float, float, dict]:
+        if cname in memo:
+            return memo[cname]
+        if depth > 64 or cname not in comps:
+            return (0.0, 0.0, {})
+        flops = 0.0
+        byts = 0.0
+        coll: dict[str, float] = {}
+        symtab = symtabs[cname]
+        for ins in comps[cname]:
+            if ins.op == "dot":
+                flops += _dot_flops(ins, symtab)
+            elif ins.op == "convolution":
+                flops += _conv_flops(ins, symtab)
+            if ins.op.startswith("fusion"):
+                m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                operand_shapes = [
+                    symtab[n]
+                    for n in re.findall(r"%([\w.\-]+)", ins.rest.split("calls=")[0])
+                    if n in symtab
+                ]
+                if m:
+                    f_fl, _, f_coll = comp_cost(m.group(1), depth + 1)
+                    flops += f_fl
+                    for k, v in f_coll.items():
+                        coll[k] = coll.get(k, 0.0) + v
+                    byts += _fusion_bytes(m.group(1), comps, ins.shape, operand_shapes)
+                else:
+                    byts += _shape_bytes(ins.shape) + sum(
+                        _shape_bytes(s) for s in operand_shapes
+                    )
+            elif ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                trips = None
+                if cm:
+                    trips = _trip_count(cm.group(1), comps)
+                if trips is None:
+                    trips = 1
+                    stats.unknown_trip_counts += 1
+                if bm:
+                    b_fl, b_by, b_coll = comp_cost(bm.group(1), depth + 1)
+                    flops += trips * b_fl
+                    byts += trips * b_by
+                    for k, v in b_coll.items():
+                        coll[k] = coll.get(k, 0.0) + trips * v
+            elif ins.op in ("call", "conditional", "custom-call", "map", "sort", "reduce", "scatter", "select-and-scatter", "reduce-window"):
+                for m in re.finditer(r"(?:calls|to_apply|branch_computations=\{)[=%]*([\w.\-]+)", ins.rest):
+                    c_fl, c_by, c_coll = comp_cost(m.group(1), depth + 1)
+                    flops += c_fl
+                    byts += c_by
+                    for k, v in c_coll.items():
+                        coll[k] = coll.get(k, 0.0) + v
+                byts += _shape_bytes(ins.shape)
+            elif ins.op.startswith(_COLL_OPS):
+                opname = next(c for c in _COLL_OPS if ins.op.startswith(c))
+                sz = 0
+                for name in re.findall(r"%([\w.\-]+)", ins.rest):
+                    if name in symtab:
+                        sz += _shape_bytes(symtab[name])
+                if sz == 0:
+                    sz = _shape_bytes(ins.shape)
+                coll[opname] = coll.get(opname, 0.0) + sz
+                byts += _shape_bytes(ins.shape)
+            elif ins.op in _SLICE_OPS:
+                byts += 2.0 * _shape_bytes(ins.shape)  # read slice + write out
+            elif ins.op == "dynamic-update-slice":
+                # in-place RMW: traffic = the update region (2nd operand)
+                names = re.findall(r"%([\w.\-]+)", ins.rest)
+                upd = symtab.get(names[1]) if len(names) > 1 else None
+                byts += 2.0 * _shape_bytes(upd) if upd else _shape_bytes(ins.shape)
+            elif ins.op not in _CHEAP_OPS and not ins.op.startswith("fusion"):
+                # top-level non-fused op: operands + result move through HBM
+                byts += _shape_bytes(ins.shape)
+                for name in set(re.findall(r"%([\w.\-]+)", ins.rest)):
+                    if name in symtab:
+                        byts += _shape_bytes(symtab[name])
+        memo[cname] = (flops, byts, coll)
+        return memo[cname]
+
+    # entry computation: the one whose name appears after ENTRY
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry:
+        fl, by, coll = comp_cost(entry)
+        stats.flops = fl
+        stats.bytes_hbm = by
+        stats.coll_bytes = coll
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (v5e constants per the task statement)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 49.5e9            # bytes/s / link
+
+
+def roofline_terms(stats: HloStats, n_chips: int, *, per_device_hlo: bool = True):
+    """The three times (seconds). HLO from a compiled SPMD module is already
+    per-device (shapes are shard-local), so divide only when it's global."""
+    div = 1 if per_device_hlo else n_chips
+    t_compute = stats.flops / div / PEAK_FLOPS
+    t_memory = stats.bytes_hbm / div / HBM_BW
+    t_coll = stats.collective_bytes / div / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }

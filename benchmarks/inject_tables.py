@@ -1,0 +1,35 @@
+"""Inject the final roofline table into EXPERIMENTS.md (<!-- ROOFLINE_TABLE -->)."""
+
+import re
+import sys
+
+sys.path.insert(0, ".")
+sys.path.insert(0, "src")
+
+from benchmarks import roofline
+
+
+def main(art_dir: str = "artifacts/dryrun"):
+    recs = roofline.load_records(art_dir)
+    table = roofline.render_table(recs, "single")
+    with open("EXPERIMENTS.md") as f:
+        txt = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in txt:
+        txt = txt.replace(marker, table, 1)
+    else:
+        # replace a previously injected table (first markdown table after §Roofline)
+        txt = re.sub(
+            r"(Single-pod baseline table.*?\n\n)\|.*?\n\n",
+            r"\1" + table + "\n\n",
+            txt,
+            count=1,
+            flags=re.S,
+        )
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(txt)
+    print("injected", len(recs), "records")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,90 @@
+"""Paper experiment sweeps (Figs 5/6/7, Table II), scaled to this host.
+
+The paper sweeps 16k-1M points / 2-128 dims / kmax 2-128 on a 64GB Java
+setup; this harness runs the same GRID SHAPE at host-appropriate sizes (the
+headline metric — the ratio of kmax-hierarchies' cost to one hierarchy's —
+is scale-free).  Every row reports runtime per phase, edge counts for
+G_mpts vs RNG**, RNG*, RNG, and the Fig-7 ratio.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import multi
+
+
+def _dataset(n: int, d: int, seed: int = 0) -> np.ndarray:
+    """Handl-Knowles-style clustered generator (paper's data family)."""
+    rng = np.random.default_rng(seed)
+    n_clusters = max(4, min(20, n // 800))
+    centers = rng.uniform(-10, 10, size=(n_clusters, d))
+    sizes = rng.multinomial(n, np.ones(n_clusters) / n_clusters)
+    parts = [
+        rng.normal(c, rng.uniform(0.5, 1.5), size=(s, d))
+        for c, s in zip(centers, sizes)
+    ]
+    return np.concatenate(parts).astype(np.float32)
+
+
+def run_cell(n: int, d: int, kmax: int, variants=("rng_ss", "rng_star", "rng"),
+             with_baseline: bool = True, seed: int = 0):
+    """One sweep cell. Returns list of result dicts."""
+    x = _dataset(n, d, seed)
+    rows = []
+    mpts = list(range(2, kmax + 1))
+    for v in variants:
+        t0 = time.monotonic()
+        res = multi.multi_hdbscan(x, kmax, variant=v, compute_hierarchies=True)
+        wall = time.monotonic() - t0
+        rows.append({
+            "bench": "sweep", "n": n, "d": d, "kmax": kmax, "method": v,
+            "wall_s": round(wall, 3),
+            **{f"t_{k}": round(tv, 3) for k, tv in res.timings.items()},
+            "edges": int(len(res.graph.edges)),
+            "edges_complete": n * (n - 1) // 2,
+            "wspd_pairs": res.graph.stats.get("n_wspd_pairs", -1),
+        })
+    if with_baseline:
+        t0 = time.monotonic()
+        _, tb = multi.hdbscan_baseline(x, mpts, kmax=kmax)
+        rows.append({
+            "bench": "sweep", "n": n, "d": d, "kmax": kmax, "method": "baseline",
+            "wall_s": round(time.monotonic() - t0, 3),
+            **{f"t_{k}": round(tv, 3) for k, tv in tb.items()},
+            "edges": n * (n - 1) // 2,
+            "edges_complete": n * (n - 1) // 2,
+        })
+        # Fig 7 denominator: ONE hierarchy at mpts=kmax via the baseline
+        t0 = time.monotonic()
+        multi.hdbscan_baseline(x, [kmax], kmax=kmax)
+        one = time.monotonic() - t0
+        for r in rows:
+            r["ratio_vs_one"] = round(r["wall_s"] / max(one, 1e-9), 2)
+    return rows
+
+
+def size_sweep(sizes=(1000, 2000, 4000, 8000), d=8, kmax=16):
+    """Fig 5a / 6a."""
+    out = []
+    for n in sizes:
+        out += run_cell(n, d, kmax)
+    return out
+
+
+def dim_sweep(dims=(2, 4, 8, 16, 32), n=4000, kmax=16):
+    """Fig 5b / 6b."""
+    out = []
+    for d in dims:
+        out += run_cell(n, d, kmax)
+    return out
+
+
+def kmax_sweep(kmaxes=(2, 4, 8, 16, 32, 64), n=4000, d=8):
+    """Fig 5c / 6c + Table II + Fig 7."""
+    out = []
+    for k in kmaxes:
+        out += run_cell(n, d, k)
+    return out

@@ -1,0 +1,106 @@
+"""§Roofline report generator: reads dry-run artifacts, adds analytic
+MODEL_FLOPS, emits the per-(arch x shape x mesh) markdown table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.models import abstract_init
+
+from . import hlo_utils
+
+
+def param_counts(cfg) -> tuple[float, float]:
+    """(total_params, active_params). Active scales routed experts by top_k/E."""
+    shapes, specs = abstract_init(cfg)
+    flat_s = jax.tree.leaves(shapes)
+    flat_spec = jax.tree.leaves(
+        specs,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(isinstance(e, (str, type(None))) for e in v),
+    )
+    total = active = 0.0
+    for sds, spec in zip(flat_s, flat_spec):
+        n = 1
+        for s in sds.shape:
+            n *= s
+        total += n
+        if cfg.n_experts and "experts" in spec:
+            active += n * (cfg.top_k / cfg.n_experts)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops_per_chip(cfg, shape_name: str, n_chips: int) -> float:
+    sh = SHAPES[shape_name]
+    total, active = param_counts(cfg)
+    # exclude embedding table from the 6ND convention
+    emb = cfg.padded_vocab * cfg.d_model
+    n_eff = active - emb
+    if sh["kind"] == "train":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 6.0 * n_eff * tokens / n_chips
+    if sh["kind"] == "prefill":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 2.0 * n_eff * tokens / n_chips
+    tokens = sh["global_batch"]  # decode: one token per sequence
+    return 2.0 * n_eff * tokens / n_chips
+
+
+def load_records(art_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        if path.endswith("summary.json"):
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render_table(recs: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "HLO GFLOP/chip | MODEL/HLO | temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh or r.get("tag"):
+            continue
+        cfg = get_config(r["arch"])
+        n_chips = 512 if mesh == "multi" else 256
+        mf = model_flops_per_chip(cfg, r["shape"], n_chips)
+        hlo_f = r["hlo_stats"]["flops_per_device"]
+        t = r["roofline"]
+        lines.append(
+            "| {arch} | {shape} | {tc:.1f} ms | {tm:.1f} ms | {tl:.1f} ms | {dom} | "
+            "{gf:.0f} | {ratio:.2f} | {mem:.1f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                tc=t["t_compute_s"] * 1e3, tm=t["t_memory_s"] * 1e3,
+                tl=t["t_collective_s"] * 1e3, dom=t["dominant"],
+                gf=hlo_f / 1e9,
+                ratio=(mf / hlo_f) if hlo_f else float("nan"),
+                mem=r["memory"]["temp_bytes_per_device"] / 2**30,
+            )
+        )
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load_records(args.art)
+    print(render_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

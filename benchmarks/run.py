@@ -1,0 +1,69 @@
+"""Benchmark entry point: one harness per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Full-scale sweeps live in
+paper_sweeps.py; this entry runs host-sized versions of each (the paper's
+headline quantities — speedup ratios and edge-count reductions — are
+scale-free).  Roofline rows are appended from the dry-run artifacts when
+present (derived = dominant-term milliseconds).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import paper_sweeps
+
+    rows = []
+    print("name,us_per_call,derived")
+
+    # Fig 5a/6a: dataset-size sweep
+    for r in paper_sweeps.size_sweep(sizes=(1000, 2000, 4000), d=8, kmax=16):
+        name = f"fig5a_size/n={r['n']}/{r['method']}"
+        edge_red = r["edges_complete"] / max(r["edges"], 1)
+        print(f"{name},{r['wall_s'] * 1e6:.0f},edge_reduction={edge_red:.1f}x")
+        rows.append(r)
+
+    # Fig 5b/6b: dimensionality sweep
+    for r in paper_sweeps.dim_sweep(dims=(2, 8, 32), n=2000, kmax=16):
+        name = f"fig5b_dims/d={r['d']}/{r['method']}"
+        edge_red = r["edges_complete"] / max(r["edges"], 1)
+        print(f"{name},{r['wall_s'] * 1e6:.0f},edge_reduction={edge_red:.1f}x")
+        rows.append(r)
+
+    # Fig 5c/6c + Table II + Fig 7: kmax sweep with ratio-vs-one-hierarchy
+    for r in paper_sweeps.kmax_sweep(kmaxes=(4, 16, 64), n=2000, d=8):
+        name = f"tab2_kmax/k={r['kmax']}/{r['method']}"
+        print(f"{name},{r['wall_s'] * 1e6:.0f},ratio_vs_one={r['ratio_vs_one']}")
+        rows.append(r)
+
+    # roofline rows from dry-run artifacts (if the matrix has been run)
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    if os.path.isdir(art):
+        from benchmarks import roofline
+
+        recs = roofline.load_records(art)
+        for r in recs:
+            if r.get("status") != "ok" or r.get("mesh") != "single":
+                continue
+            t = r["roofline"]
+            dom_ms = max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"]) * 1e3
+            print(
+                f"roofline/{r['arch']}/{r['shape']},{r['t_compile_s'] * 1e6:.0f},"
+                f"dominant={t['dominant']}:{dom_ms:.1f}ms"
+            )
+
+    import json
+
+    out = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench_rows.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train an LM, embed a corpus, explore it with the
+multi-density engine, pick a density level by DBCV, emit curation decisions.
+
+This is the production use-case that motivates shipping the paper's engine
+inside an LM framework (DESIGN.md §4): embedding-space analysis — semantic
+dedup / outlier removal — needs clusterings at MANY density levels, and the
+engine provides all of them for ~the cost of two.
+
+  PYTHONPATH=src python examples/embedding_curation.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import dbcv, multi
+from repro.launch.train import main as train_main
+from repro.models import get_model, init_params
+from repro.train import data as data_lib
+
+
+def main():
+    # 1) train a small LM briefly (real train loop, synthetic corpus)
+    print("=== step 1: train a reduced LM for 15 steps ===")
+    train_main([
+        "--arch", "qwen2_1_5b", "--reduced", "--steps", "15",
+        "--global-batch", "4", "--seq-len", "64", "--lr", "3e-3",
+    ])
+
+    # 2) embed a "corpus" with the LM (mean-pooled hidden states)
+    print("\n=== step 2: embed 1200 documents ===")
+    cfg = get_config("qwen2_1_5b").reduced()
+    model = get_model(cfg)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    dcfg = data_lib.DataConfig(seed=9, vocab=cfg.vocab, seq_len=48, global_batch=8)
+
+    @jax.jit
+    def embed(params, tokens):
+        h, _ = model.forward(params, cfg, tokens)
+        return jnp.mean(h, axis=1)
+
+    embs = []
+    for step in range(150):
+        batch = data_lib.train_batch(dcfg, step)
+        embs.append(np.asarray(embed(params, batch["tokens"])))
+    x = np.concatenate(embs).astype(np.float32)
+    # inject duplicated docs (the dedup targets)
+    x[-40:] = x[:40] + np.random.default_rng(0).normal(0, 1e-3, x[:40].shape)
+    print(f"embeddings: {x.shape}")
+
+    # 3) multi-density exploration
+    print("\n=== step 3: all hierarchies for mpts in [2, 24] ===")
+    res = multi.multi_hdbscan(x, 24, variant="rng_star")
+    scores = {}
+    for h in res.hierarchies:
+        scores[h.mpts] = dbcv.dbcv_relative_validity(h.mst_ea, h.mst_eb, h.mst_w, h.labels)
+    best = max(scores, key=lambda k: scores[k])
+    print("DBCV by mpts (sampled):",
+          {k: round(v, 3) for k, v in list(scores.items())[::4]})
+    print(f"selected density level: mpts={best} (DBCV={scores[best]:.3f})")
+
+    # 4) curation decisions at the chosen level
+    h = [hh for hh in res.hierarchies if hh.mpts == best][0]
+    n_noise = int((h.labels == -1).sum())
+    sizes = np.bincount(h.labels[h.labels >= 0]) if h.n_clusters else []
+    print(f"\n=== step 4: curation report ===")
+    print(f"clusters: {h.n_clusters}, outliers flagged: {n_noise}")
+    # near-duplicate detection: tiny-mrd MST edges = candidate dupes
+    thresh = np.quantile(h.mst_w, 0.01)
+    dup_edges = h.mst_w < max(thresh, 1e-6)
+    print(f"near-duplicate pairs (bottom-1% mrd): {int(dup_edges.sum())} "
+          f"(injected 40 dupes)")
+    keep = np.ones(len(x), bool)
+    keep[h.mst_eb[dup_edges]] = False
+    print(f"keep list: {int(keep.sum())}/{len(x)} documents")
+
+
+if __name__ == "__main__":
+    main()

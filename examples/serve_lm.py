@@ -1,0 +1,36 @@
+"""Serve a small LM with batched requests through the decode engine.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.engine import Engine, GenRequest
+
+
+def main():
+    cfg = get_config("gemma3_4b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=96)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        GenRequest(prompt=rng.integers(2, cfg.vocab, size=rng.integers(3, 12)).astype(np.int32),
+                   max_new_tokens=24, temperature=0.8)
+        for _ in range(8)
+    ]
+    outs = eng.generate(reqs, seed=1)
+    for i, o in enumerate(outs):
+        print(f"req {i}: prompt_len={len(reqs[i].prompt)} -> {len(o)} tokens: {o[:10]}...")
+    print("engine stats:", eng.last_stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: multi-density clustering hierarchies (RNG-HDBSCAN*) at pod scale."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+Public API:
+  multi_hdbscan       — all hierarchies for mpts in [kmin, kmax] via RNG^kmax
+  hdbscan_baseline    — optimized re-run baseline (shared kNN + dense MST)
+  build_rng_graph     — the single RNG^kmax (variants rng_ss / rng_star / rng)
+  boruvka_mst(_range) — batched edge-list MSTs
+  hierarchy, dbcv     — extraction & validation submodules
+"""
+
+from . import boruvka, dbcv, hierarchy, mrd, rng, sbcn, wspd
+from .boruvka import boruvka_mst, boruvka_mst_range, prim_dense_mst
+from .mrd import core_distances2, edge_mrd2, mrd2_from_parts, reweight_all_mpts
+from .multi import HierarchyResult, MultiDensityResult, hdbscan_baseline, multi_hdbscan
+from .rng import RngGraph, build_rng_graph
+
+__all__ = [
+    "boruvka", "dbcv", "hierarchy", "mrd", "rng", "sbcn", "wspd",
+    "boruvka_mst", "boruvka_mst_range", "prim_dense_mst",
+    "core_distances2", "edge_mrd2", "mrd2_from_parts", "reweight_all_mpts",
+    "HierarchyResult", "MultiDensityResult", "hdbscan_baseline", "multi_hdbscan",
+    "RngGraph", "build_rng_graph",
+]

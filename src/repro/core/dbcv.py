@@ -1,0 +1,52 @@
+"""DBCV-style relative validity over an mrd MST (paper §I motivation).
+
+The paper motivates multiple hierarchies by using an internal validation
+measure (DBCV, Moulavi et al. 2014) to pick promising density levels across
+hierarchies from different mpts.  Full DBCV recomputes all-points-core
+distances; we implement the standard fast approximation computed directly on
+the per-mpts mutual-reachability MST (the same simplification as the
+reference hdbscan library's ``relative_validity_``):
+
+  density sparseness DSC(Ci) = max internal MST edge of Ci
+  density separation DSPC(Ci) = min MST edge leaving Ci (to any other cluster)
+  V(Ci) = (DSPC - DSC) / max(DSPC, DSC);   DBCV = sum |Ci|/n * V(Ci)
+
+Noise points are excluded.  Returns a value in [-1, 1]; higher is better.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def dbcv_relative_validity(
+    ea: np.ndarray,
+    eb: np.ndarray,
+    w: np.ndarray,
+    labels: np.ndarray,
+) -> float:
+    n = labels.shape[0]
+    cl = np.unique(labels[labels >= 0])
+    if len(cl) < 2:
+        return -1.0
+
+    la, lb = labels[ea], labels[eb]
+    internal = (la == lb) & (la >= 0)
+    crossing = (la != lb) & (la >= 0) & (lb >= 0)
+
+    score = 0.0
+    n_clustered = int(np.sum(labels >= 0))
+    for c in cl:
+        mask_int = internal & (la == c)
+        dsc = float(w[mask_int].max()) if mask_int.any() else 0.0
+        mask_out = crossing & ((la == c) | (lb == c))
+        dspc = float(w[mask_out].min()) if mask_out.any() else np.inf
+        denom = max(dspc, dsc)
+        v = 0.0 if denom in (0.0, np.inf) and dspc is np.inf else (
+            (dspc - dsc) / denom if denom > 0 else 0.0
+        )
+        if not np.isfinite(v):
+            v = 1.0 if dsc == 0.0 else 0.0
+        size_c = int(np.sum(labels == c))
+        score += size_c / max(n_clustered, 1) * v
+    return float(score)

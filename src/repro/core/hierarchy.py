@@ -1,0 +1,252 @@
+"""HDBSCAN* hierarchy extraction: dendrogram -> condensed tree -> clusters.
+
+Host-side post-processing (numpy): consumes the (n-1)-edge MST produced on
+device and is O(n alpha(n)) scalar work (DESIGN.md §3).  Implements the
+standard HDBSCAN* machinery (Campello et al. 2013/2015):
+
+  * ``single_linkage``  — scipy-style merge matrix Z via union-find over
+    weight-sorted MST edges.
+  * ``condense_tree``   — collapse the dendrogram w.r.t. ``min_cluster_size``:
+    a node is a *true split* iff both children have >= mcs points; otherwise
+    points "fall out" of the surviving cluster at that lambda = 1/distance.
+  * ``compute_stability`` / ``extract_clusters`` — excess-of-mass (FOSC)
+    selection, bottom-up.
+  * ``labels_for``      — final labels (-1 = noise) + per-point lambdas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def single_linkage(ea: np.ndarray, eb: np.ndarray, w: np.ndarray, n: int) -> np.ndarray:
+    """Union-find single linkage. Returns Z (n-1, 4): left, right, dist, size.
+
+    Cluster ids: 0..n-1 are points; n+i is the cluster formed by row i.
+    Edges must form a spanning tree; `w` are (non-squared) distances.
+    """
+    order = np.lexsort((np.arange(len(w)), w))
+    parent = np.arange(2 * n - 1, dtype=np.int64)
+    uf_label = np.arange(n, dtype=np.int64)  # current cluster label of each root
+    size = np.ones(2 * n - 1, dtype=np.int64)
+
+    def find(v):
+        root = v
+        while parent[root] != root:
+            root = parent[root]
+        while parent[v] != root:  # path compression
+            parent[v], v = root, parent[v]
+        return root
+
+    Z = np.zeros((n - 1, 4), np.float64)
+    nxt = 0
+    for ei in order:
+        ra, rb = find(ea[ei]), find(eb[ei])
+        if ra == rb:
+            continue
+        la, lb = uf_label[ra], uf_label[rb]
+        new = n + nxt
+        merged = size[la] + size[lb]
+        Z[nxt] = (la, lb, w[ei], merged)
+        size[new] = merged
+        # merge union-find roots
+        parent[ra] = rb
+        uf_label[rb] = new
+        nxt += 1
+    if nxt != n - 1:
+        raise ValueError(f"edge list does not span: {nxt + 1} components remain")
+    return Z
+
+
+@dataclasses.dataclass
+class CondensedTree:
+    parent: np.ndarray      # (k,) condensed parent cluster id (>= n)
+    child: np.ndarray       # (k,) point id (< n) or child cluster id (>= n)
+    lam: np.ndarray         # (k,) lambda = 1/dist at which child leaves parent
+    child_size: np.ndarray  # (k,)
+    n_points: int
+    root: int               # root cluster id (== n_points)
+
+
+def condense_tree(Z: np.ndarray, n: int, min_cluster_size: int) -> CondensedTree:
+    """Condense a single-linkage dendrogram (hdbscan-style, iterative BFS)."""
+    root = 2 * n - 2  # top merge (dendrogram id n + (n-2))
+    next_label = n + 1
+    relabel = {root: n}
+
+    parents: list[int] = []
+    children: list[int] = []
+    lams: list[float] = []
+    sizes: list[int] = []
+
+    def node_info(node):
+        """(left, right, dist, size) for dendrogram node id; points -> leaf."""
+        row = Z[node - n]
+        return int(row[0]), int(row[1]), float(row[2]), int(row[3])
+
+    def node_size(node):
+        return 1 if node < n else int(Z[node - n][3])
+
+    def leaves_of(node):
+        out = []
+        stack = [node]
+        while stack:
+            v = stack.pop()
+            if v < n:
+                out.append(v)
+            else:
+                l, r, _, _ = node_info(v)
+                stack.extend((l, r))
+        return out
+
+    ignore = set()
+    # BFS top-down over dendrogram nodes that still carry a cluster label.
+    stack = [root]
+    while stack:
+        node = stack.pop()
+        if node in ignore or node < n:
+            continue
+        cur_label = relabel[node]
+        left, right, dist, _ = node_info(node)
+        lam = 1.0 / dist if dist > 0.0 else np.inf
+        ls, rs = node_size(left), node_size(right)
+
+        if ls >= min_cluster_size and rs >= min_cluster_size:
+            for ch, s in ((left, ls), (right, rs)):
+                relabel[ch] = next_label
+                parents.append(cur_label)
+                children.append(next_label)
+                lams.append(lam)
+                sizes.append(s)
+                next_label += 1
+                stack.append(ch)
+        else:
+            for ch, s in ((left, ls), (right, rs)):
+                if s >= min_cluster_size:
+                    relabel[ch] = cur_label  # cluster continues under same label
+                    stack.append(ch)
+                else:
+                    for p in leaves_of(ch):  # points fall out at this lambda
+                        parents.append(cur_label)
+                        children.append(p)
+                        lams.append(lam)
+                        sizes.append(1)
+                    ignore.add(ch)
+
+    return CondensedTree(
+        parent=np.asarray(parents, np.int64),
+        child=np.asarray(children, np.int64),
+        lam=np.asarray(lams, np.float64),
+        child_size=np.asarray(sizes, np.int64),
+        n_points=n,
+        root=n,
+    )
+
+
+def compute_stability(tree: CondensedTree) -> dict[int, float]:
+    """Excess-of-mass stability: sum_p (lambda_p - lambda_birth(C))."""
+    lam_birth: dict[int, float] = {tree.root: 0.0}
+    cluster_rows = tree.child >= tree.n_points
+    for p, c, l in zip(
+        tree.parent[cluster_rows], tree.child[cluster_rows], tree.lam[cluster_rows]
+    ):
+        lam_birth[int(c)] = float(l)
+
+    stability: dict[int, float] = {c: 0.0 for c in lam_birth}
+    finite_cap = np.max(tree.lam[np.isfinite(tree.lam)], initial=1.0)
+    for p, l, s in zip(tree.parent, tree.lam, tree.child_size):
+        lv = float(l) if np.isfinite(l) else float(finite_cap)
+        stability[int(p)] = stability.get(int(p), 0.0) + (lv - lam_birth[int(p)]) * int(s)
+    return stability
+
+
+def extract_clusters(
+    tree: CondensedTree,
+    stability: dict[int, float],
+    *,
+    allow_single_cluster: bool = False,
+) -> list[int]:
+    """FOSC bottom-up selection; returns selected condensed cluster ids."""
+    children_of: dict[int, list[int]] = {}
+    cluster_rows = tree.child >= tree.n_points
+    for p, c in zip(tree.parent[cluster_rows], tree.child[cluster_rows]):
+        children_of.setdefault(int(p), []).append(int(c))
+
+    clusters = sorted(stability.keys(), reverse=True)  # children have larger ids
+    selected = {c: True for c in clusters}
+    subtree_val = dict(stability)
+    for c in clusters:
+        kids = children_of.get(c, [])
+        if not kids:
+            continue
+        kid_sum = sum(subtree_val[k] for k in kids)
+        if kid_sum > stability[c] or (c == tree.root and not allow_single_cluster):
+            selected[c] = False
+            subtree_val[c] = kid_sum
+        else:
+            # select c; deselect entire subtree below
+            stack = list(kids)
+            while stack:
+                k = stack.pop()
+                selected[k] = False
+                stack.extend(children_of.get(k, []))
+    if not allow_single_cluster:
+        selected[tree.root] = False
+    return [c for c in clusters if selected[c]]
+
+
+def labels_for(tree: CondensedTree, selected: list[int]) -> tuple[np.ndarray, np.ndarray]:
+    """Per-point labels (-1 noise) and the lambda at which each point departs."""
+    n = tree.n_points
+    labels = np.full(n, -1, np.int64)
+    lam_pt = np.zeros(n, np.float64)
+
+    sel = set(selected)
+    # map each condensed cluster to its selected ancestor (or -1)
+    parent_of: dict[int, int] = {}
+    cluster_rows = tree.child >= n
+    for p, c in zip(tree.parent[cluster_rows], tree.child[cluster_rows]):
+        parent_of[int(c)] = int(p)
+
+    def selected_ancestor(c: int) -> int:
+        while True:
+            if c in sel:
+                return c
+            if c not in parent_of:
+                return -1
+            c = parent_of[c]
+
+    cache: dict[int, int] = {}
+    point_rows = ~cluster_rows
+    label_ids = {c: i for i, c in enumerate(sorted(sel))}
+    for p, c, l in zip(
+        tree.parent[point_rows], tree.child[point_rows], tree.lam[point_rows]
+    ):
+        p = int(p)
+        if p not in cache:
+            cache[p] = selected_ancestor(p)
+        anc = cache[p]
+        if anc != -1:
+            labels[int(c)] = label_ids[anc]
+            lam_pt[int(c)] = l
+    return labels, lam_pt
+
+
+def hdbscan_labels(
+    ea: np.ndarray,
+    eb: np.ndarray,
+    w: np.ndarray,
+    n: int,
+    min_cluster_size: int,
+    *,
+    allow_single_cluster: bool = False,
+) -> tuple[np.ndarray, CondensedTree, dict[int, float]]:
+    """MST edges -> (labels, condensed tree, stability). `w` = real distances."""
+    Z = single_linkage(ea, eb, w, n)
+    tree = condense_tree(Z, n, min_cluster_size)
+    stability = compute_stability(tree)
+    selected = extract_clusters(tree, stability, allow_single_cluster=allow_single_cluster)
+    labels, _ = labels_for(tree, selected)
+    return labels, tree, stability

@@ -1,0 +1,202 @@
+"""RNG construction pipeline: RNG** -> RNG* -> exact RNG (paper §IV-E, Alg. 1).
+
+Variants (paper's naming):
+  * ``rng_ss``  (RNG**): WSPD+SBCN supergraph, no filtering (Alg. 1 line 12).
+  * ``rng_star`` (RNG*): + the 2*kmax-check filter using each endpoint's
+    kmax-NN list, plus the core-distance certificate for definite keeps
+    (lines 13-21).  May keep some non-RNG edges.
+  * ``rng``     (exact): + full-dataset lune scan for edges the cheap filter
+    could not certify either way (lines 22-26) — the Pallas ``lune_filter``
+    kernel / its jnp twin.
+
+All predicates run in squared space (see core.mrd).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from . import mrd as mrd_mod
+from . import sbcn as sbcn_mod
+from . import wspd as wspd_mod
+
+VARIANTS = ("rng_ss", "rng_star", "rng")
+
+
+@dataclasses.dataclass
+class RngGraph:
+    """The single precomputed graph that serves the whole mpts range."""
+
+    edges: np.ndarray      # (m, 2) int64, a < b
+    d2: np.ndarray         # (m,)  squared Euclidean edge lengths
+    w2_kmax: np.ndarray    # (m,)  squared mrd_kmax weights
+    variant: str
+    n_points: int
+    stats: dict
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _knn_lune_check(x, cd2k, knn_idx, knn_d2, ea, eb, w2, *, chunk: int = 16384):
+    """Paper lines 14-17: is any kmax-NN of a or b strictly inside lune(a,b)?
+
+    Tie robustness: mrd ties are STRUCTURAL here (e.g. c is b's kmax-th
+    neighbor => mrd(b,c) = cd(b) = mrd(a,b) exactly in real arithmetic), and
+    f32 noise — including XLA's per-callsite FMA contraction, which makes
+    even identical formulas differ by ulps across call sites — must never
+    flip a tie into a removal.  Two defenses: (1) own-list distances are read
+    from the stored kNN pass instead of recomputed, making the most common
+    tie bit-exact; (2) a norm-scaled epsilon margin is added on the "inside"
+    side, so residual noise can only KEEP an edge (the superset-safe
+    direction), mirroring the exact-filter kernel.
+
+    Returns (m,) bool `inside_any`.
+    """
+    eps = jnp.float32(64.0 * 1.1920929e-07)
+
+    def one_chunk(args):
+        ea_c, eb_c, w2_c = args
+        cand_a = knn_idx[ea_c]                                           # (c, k)
+        cand_b = knn_idx[eb_c]
+        xa = x[ea_c].astype(jnp.float32)
+        xb = x[eb_c].astype(jnp.float32)
+        xca = x[cand_a].astype(jnp.float32)                              # (c, k, d)
+        xcb = x[cand_b].astype(jnp.float32)
+        # own-list distances come from storage; cross distances are recomputed
+        d2a_ca = knn_d2[ea_c]                                            # d2(a, cand_a)
+        d2b_cb = knn_d2[eb_c]                                            # d2(b, cand_b)
+        d2b_ca = jnp.sum((xb[:, None, :] - xca) ** 2, -1)                # d2(b, cand_a)
+        d2a_cb = jnp.sum((xa[:, None, :] - xcb) ** 2, -1)                # d2(a, cand_b)
+
+        cda = cd2k[ea_c][:, None]
+        cdb = cd2k[eb_c][:, None]
+        an = jnp.sum(xa * xa, -1)[:, None]
+        bn = jnp.sum(xb * xb, -1)[:, None]
+
+        def inside(cand, xc, d2ac, d2bc):
+            cdc = cd2k[cand]
+            cn = jnp.sum(xc * xc, -1)
+            mrd_ac = jnp.maximum(jnp.maximum(d2ac, cda), cdc) + eps * (an + cn)
+            mrd_bc = jnp.maximum(jnp.maximum(d2bc, cdb), cdc) + eps * (bn + cn)
+            not_ep = (cand != ea_c[:, None]) & (cand != eb_c[:, None])
+            return jnp.any(
+                (jnp.maximum(mrd_ac, mrd_bc) < w2_c[:, None]) & not_ep, axis=1
+            )
+
+        return inside(cand_a, xca, d2a_ca, d2b_ca) | inside(cand_b, xcb, d2a_cb, d2b_cb)
+
+    m = ea.shape[0]
+    m_pad = -(-m // chunk) * chunk
+    pad = lambda v, f: jnp.concatenate(  # noqa: E731
+        [v, jnp.full((m_pad - m,), f, v.dtype)]
+    )
+    ea_p, eb_p = pad(ea, 0), pad(eb, 0)
+    w2_p = pad(w2, -jnp.inf)  # padded edges can never have points inside
+    res = jax.lax.map(
+        one_chunk,
+        (
+            ea_p.reshape(-1, chunk),
+            eb_p.reshape(-1, chunk),
+            w2_p.reshape(-1, chunk),
+        ),
+    )
+    return res.reshape(m_pad)[:m]
+
+
+def filter_edges(
+    x: jax.Array,
+    cd2: jax.Array,
+    knn_idx: jax.Array,
+    knn_d2: jax.Array,
+    edges: np.ndarray,
+    variant: str,
+    *,
+    backend: str | None = None,
+) -> tuple[np.ndarray, dict]:
+    """Apply the paper's filter cascade to candidate `edges`.
+
+    Returns (kept edge array, stats dict).
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}")
+    stats = {"m_candidates": int(len(edges))}
+    if variant == "rng_ss" or len(edges) == 0:
+        return edges, stats
+
+    cd2k = cd2[:, -1]
+    ea = jnp.asarray(edges[:, 0], jnp.int32)
+    eb = jnp.asarray(edges[:, 1], jnp.int32)
+    d2_e = mrd_mod.edge_d2(x, ea, eb)
+    w2 = mrd_mod.mrd2_from_parts(d2_e, cd2k[ea], cd2k[eb])
+
+    inside_any = np.asarray(_knn_lune_check(x, cd2k, knn_idx, knn_d2, ea, eb, w2))
+    # core-distance certificate: w == max(c(a), c(b))  =>  definitely in RNG
+    certified = np.asarray(w2 == jnp.maximum(cd2k[ea], cd2k[eb]))
+
+    keep = ~inside_any
+    stats["m_removed_knn"] = int(inside_any.sum())
+    stats["m_certified"] = int((keep & certified).sum())
+
+    if variant == "rng":
+        unresolved = keep & ~certified
+        stats["m_unresolved"] = int(unresolved.sum())
+        if unresolved.any():
+            ui = np.nonzero(unresolved)[0]
+            nonempty = np.asarray(
+                kernels.ops.lune_nonempty(
+                    ea[ui], eb[ui], w2[ui], x, cd2k, backend=backend
+                )
+            )
+            keep[ui[nonempty]] = False
+            stats["m_removed_exact"] = int(nonempty.sum())
+    return edges[keep], stats
+
+
+def build_rng_graph(
+    x: jax.Array,
+    knn_d2: jax.Array,
+    knn_idx: jax.Array,
+    *,
+    variant: str = "rng_star",
+    separation: float = 1.0,
+    backend: str | None = None,
+) -> RngGraph:
+    """End-to-end RNG^kmax construction (Alg. 1 lines 5-29).
+
+    knn_d2/knn_idx: the single (kmax-1)-NN pass (ascending squared distances).
+    """
+    n = x.shape[0]
+    cd2 = mrd_mod.core_distances2(knn_d2)
+    cd_kmax = np.sqrt(np.asarray(cd2[:, -1], np.float64))
+
+    tree = wspd_mod.build_fair_split_tree(np.asarray(x, np.float64), cd_kmax)
+    pu, pv = wspd_mod.wspd_pairs(tree, s=separation)
+    candidates = sbcn_mod.sbcn_edges(
+        x,
+        cd2[:, -1],
+        tree.perm,
+        tree.start[pu],
+        tree.end[pu] - tree.start[pu],
+        tree.start[pv],
+        tree.end[pv] - tree.start[pv],
+    )
+
+    edges, stats = filter_edges(
+        x, cd2, knn_idx, knn_d2, candidates, variant, backend=backend
+    )
+    stats["n_wspd_pairs"] = int(len(pu))
+    stats["m_edges"] = int(len(edges))
+
+    ea = jnp.asarray(edges[:, 0], jnp.int32)
+    eb = jnp.asarray(edges[:, 1], jnp.int32)
+    d2_e = np.asarray(mrd_mod.edge_d2(x, ea, eb))
+    w2 = np.maximum(np.maximum(np.asarray(cd2[:, -1])[edges[:, 0]],
+                               np.asarray(cd2[:, -1])[edges[:, 1]]), d2_e)
+    return RngGraph(
+        edges=edges, d2=d2_e, w2_kmax=w2, variant=variant, n_points=n, stats=stats
+    )

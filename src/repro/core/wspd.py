@@ -1,0 +1,149 @@
+"""Well-Separated Pair Decomposition with the paper's mrd-aware predicate.
+
+Host-side control plane (numpy): the fair-split tree and the pair recursion
+are pointer-chasing scalar work — O(n log n) node operations — which a real
+accelerator deployment keeps on the driver CPU (DESIGN.md §3).  All O(n^2)
+distance work consumes the *output* of this module on device.
+
+Well-separation (paper §IV-E, adapting Callahan-Kosaraju):
+
+    D(A, B) >= s * max{ diam(B_A), diam(B_B), max_{p in A u B} c_kmax(p) }
+
+where ``B_X`` is the ball circumscribing the bounding box of X and ``D`` is
+the (lower-bounded) distance between the two balls.  ``s = 1``.
+
+Termination note: with the core-distance term two *singleton* nodes can be
+impossible to separate (d(a,b) < max core dist) and cannot be split further;
+such pairs are emitted anyway — for singletons the pair IS its own SBCN edge,
+so emitting it preserves the RNG-superset property (it only ever ADDS a
+candidate edge).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FairSplitTree:
+    """Array-encoded fair-split tree over a permutation of point indices."""
+
+    perm: np.ndarray        # (n,)  point indices, contiguous per node
+    start: np.ndarray       # (n_nodes,) range start into perm
+    end: np.ndarray         # (n_nodes,) range end (exclusive)
+    left: np.ndarray        # (n_nodes,) child id or -1
+    right: np.ndarray       # (n_nodes,)
+    center: np.ndarray      # (n_nodes, d) bbox center
+    radius: np.ndarray      # (n_nodes,)  half bbox diagonal (ball radius)
+    max_cd: np.ndarray      # (n_nodes,)  max core distance (NOT squared) in node
+
+    @property
+    def n_nodes(self) -> int:
+        return self.start.shape[0]
+
+    def points(self, u: int) -> np.ndarray:
+        return self.perm[self.start[u] : self.end[u]]
+
+
+def build_fair_split_tree(x: np.ndarray, cd_kmax: np.ndarray) -> FairSplitTree:
+    """Midpoint-split fair-split tree; leaves are single points."""
+    n, _ = x.shape
+    max_nodes = 2 * n - 1
+    perm = np.arange(n)
+    start = np.zeros(max_nodes, np.int64)
+    end = np.zeros(max_nodes, np.int64)
+    left = np.full(max_nodes, -1, np.int64)
+    right = np.full(max_nodes, -1, np.int64)
+    centers = np.zeros((max_nodes, x.shape[1]), np.float64)
+    radii = np.zeros(max_nodes, np.float64)
+    max_cd = np.zeros(max_nodes, np.float64)
+
+    node_count = 1
+    start[0], end[0] = 0, n
+    stack = [0]
+    while stack:
+        u = stack.pop()
+        s, e = start[u], end[u]
+        idx = perm[s:e]
+        pts = x[idx]
+        lo, hi = pts.min(axis=0), pts.max(axis=0)
+        centers[u] = (lo + hi) / 2.0
+        radii[u] = 0.5 * float(np.linalg.norm(hi - lo))
+        max_cd[u] = float(cd_kmax[idx].max())
+        if e - s == 1:
+            continue
+        dim = int(np.argmax(hi - lo))
+        mid = 0.5 * (lo[dim] + hi[dim])
+        mask = pts[:, dim] <= mid
+        if mask.all() or not mask.any():
+            # Degenerate (coincident coords): median split by order.
+            order = np.argsort(pts[:, dim], kind="stable")
+            half = (e - s) // 2
+            mask = np.zeros(e - s, bool)
+            mask[order[:half]] = True
+        perm[s:e] = np.concatenate([idx[mask], idx[~mask]])
+        nl = int(mask.sum())
+        lid, rid = node_count, node_count + 1
+        node_count += 2
+        left[u], right[u] = lid, rid
+        start[lid], end[lid] = s, s + nl
+        start[rid], end[rid] = s + nl, e
+        stack.append(lid)
+        stack.append(rid)
+
+    sl = slice(0, node_count)
+    return FairSplitTree(
+        perm=perm,
+        start=start[sl].copy(),
+        end=end[sl].copy(),
+        left=left[sl].copy(),
+        right=right[sl].copy(),
+        center=centers[sl].copy(),
+        radius=radii[sl].copy(),
+        max_cd=max_cd[sl].copy(),
+    )
+
+
+def wspd_pairs(tree: FairSplitTree, s: float = 1.0) -> tuple[np.ndarray, np.ndarray]:
+    """Enumerate well-separated pairs w.r.t. the mrd predicate.
+
+    Level-synchronous vectorized search: the work list of candidate (u, v)
+    node pairs is processed as whole numpy arrays per round (the recursion
+    depth is O(log n + split chain), so ~tens of rounds regardless of the
+    pair count).  Returns (U, V) arrays of node ids.
+    """
+    center, radius, max_cd = tree.center, tree.radius, tree.max_cd
+    left, right = tree.left, tree.right
+    size = tree.end - tree.start
+
+    internal = np.nonzero(left != -1)[0]
+    U = left[internal]
+    V = right[internal]
+    out_u: list[np.ndarray] = []
+    out_v: list[np.ndarray] = []
+    while len(U):
+        d_centers = np.linalg.norm(center[U] - center[V], axis=1)
+        dist_lb = np.maximum(0.0, d_centers - radius[U] - radius[V])
+        rhs = s * np.maximum(
+            np.maximum(2.0 * radius[U], 2.0 * radius[V]),
+            np.maximum(max_cd[U], max_cd[V]),
+        )
+        sep = dist_lb >= rhs
+        # unsplittable singleton-singleton pairs are emitted (module docstring)
+        emit = sep | ((size[U] == 1) & (size[V] == 1))
+        out_u.append(U[emit])
+        out_v.append(V[emit])
+        U, V = U[~emit], V[~emit]
+        if not len(U):
+            break
+        # split the "bigger" node (by ball radius, then size)
+        su = (radius[U] > radius[V]) | (
+            (radius[U] == radius[V]) & (size[U] >= size[V])
+        )
+        Us, Vs = U[su], V[su]
+        Uo, Vo = U[~su], V[~su]
+        U = np.concatenate([left[Us], right[Us], Uo, Uo])
+        V = np.concatenate([Vs, Vs, left[Vo], right[Vo]])
+    return np.concatenate(out_u), np.concatenate(out_v)

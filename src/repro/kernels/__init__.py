@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ jnp twins).
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jitted
+dispatching wrappers), ref.py (pure-jnp oracles used by tests).
+"""
+
+from . import ops, ref
+from .lune_filter import lune_filter
+from .pairwise_topk import pairwise_topk
+
+__all__ = ["ops", "ref", "lune_filter", "pairwise_topk"]

@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: blocked lune-emptiness test for exact-RNG filtering.
+
+Paper §IV-E, Algorithm 1 lines 22-26: an edge ``(a, b)`` with mutual-
+reachability weight ``w = mrd_kmax(a, b)`` survives into the exact RNG iff no
+point ``c`` lies strictly inside ``lune(a, b)``:
+
+    inside(c)  <=>  max( mrd(a, c), mrd(b, c) ) < w ,   c not in {a, b}
+
+with ``mrd(x, c) = max( d(x, c), cd_kmax(x), cd_kmax(c) )``.
+
+The paper scans the dataset per unresolved edge; the TPU adaptation processes
+an (edge-tile x point-tile) block per grid step: two MXU dot products give
+``d2(a, c)`` and ``d2(b, c)`` for the whole tile, the VPU applies the max
+cascade, and a per-edge OR is accumulated into a revisited output block.
+Everything is in *squared* space (max and comparisons commute with sqrt).
+
+Working set per step: (be, d) a/b point tiles, (bc, d) candidate tile,
+2 x (be, bc) distance tiles — tiled for VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+
+def _lune_filter_kernel(
+    ax_ref,     # (be, d)  edge endpoint a coordinates
+    bx_ref,     # (be, d)  edge endpoint b coordinates
+    acd_ref,    # (be, 1)  cd2_kmax(a)
+    bcd_ref,    # (be, 1)  cd2_kmax(b)
+    aidx_ref,   # (be, 1)  global index of a
+    bidx_ref,   # (be, 1)  global index of b
+    w_ref,      # (be, 1)  squared mrd_kmax edge weight
+    c_ref,      # (bc, d)  candidate point tile
+    ccd_ref,    # (bc, 1)  cd2_kmax(c)
+    out_ref,    # (be, 1)  int32: 1 if some c is inside lune(a, b)
+    *,
+    block_e: int,
+    block_c: int,
+    n_total: int,
+):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        out_ref[...] = jnp.zeros((block_e, 1), jnp.int32)
+
+    a = ax_ref[...].astype(jnp.float32)
+    b = bx_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+
+    cn = jnp.sum(c * c, axis=-1, keepdims=True).T                       # (1, bc)
+    d2_ac = jnp.sum(a * a, -1, keepdims=True) + cn - 2.0 * jax.lax.dot_general(
+        a, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d2_bc = jnp.sum(b * b, -1, keepdims=True) + cn - 2.0 * jax.lax.dot_general(
+        b, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d2_ac = jnp.maximum(d2_ac, 0.0)
+    d2_bc = jnp.maximum(d2_bc, 0.0)
+
+    ccd = ccd_ref[...].T                                                # (1, bc)
+    mrd_ac = jnp.maximum(jnp.maximum(d2_ac, acd_ref[...]), ccd)
+    mrd_bc = jnp.maximum(jnp.maximum(d2_bc, bcd_ref[...]), ccd)
+
+    # Cancellation guard: the |a|^2+|c|^2-2ac form can err by O(eps * norms);
+    # a point only counts as inside the lune if it beats that margin, so
+    # numeric noise can only ADD edges (safe: keeps the RNG a superset).
+    eps = jnp.float32(64.0 * 1.1920929e-07)
+    an = jnp.sum(a * a, -1, keepdims=True)
+    bn = jnp.sum(b * b, -1, keepdims=True)
+    margin_ac = eps * (an + cn)
+    margin_bc = eps * (bn + cn)
+
+    col_g = cj * block_c + jax.lax.broadcasted_iota(jnp.int32, (block_e, block_c), 1)
+    is_endpoint = (col_g == aidx_ref[...]) | (col_g == bidx_ref[...])
+    padded = col_g >= n_total
+
+    inside = (
+        (jnp.maximum(mrd_ac + margin_ac, mrd_bc + margin_bc) < w_ref[...])
+        & ~is_endpoint
+        & ~padded
+    )
+    any_inside = jnp.any(inside, axis=1, keepdims=True).astype(jnp.int32)
+    out_ref[...] = out_ref[...] | any_inside
+
+
+def lune_filter(
+    a_xyz: jax.Array,   # (m, d) coordinates of edge endpoint a
+    b_xyz: jax.Array,   # (m, d) coordinates of edge endpoint b
+    a_cd2: jax.Array,   # (m,)   squared core distance of a (at kmax)
+    b_cd2: jax.Array,   # (m,)   squared core distance of b (at kmax)
+    a_idx: jax.Array,   # (m,)   global point index of a
+    b_idx: jax.Array,   # (m,)   global point index of b
+    w2: jax.Array,      # (m,)   squared mrd_kmax edge weight
+    points: jax.Array,  # (n, d) full dataset
+    cd2: jax.Array,     # (n,)   squared core distances of all points (at kmax)
+    *,
+    block_e: int = 256,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns a boolean (m,) mask: True where the lune is NON-empty (remove edge)."""
+    m, d = a_xyz.shape
+    n = points.shape[0]
+    block_e = min(block_e, max(8, m))
+    block_c = min(block_c, max(8, n))
+
+    m_pad = -(-m // block_e) * block_e
+    n_pad = -(-n // block_c) * block_c
+
+    def padm(x, fill=0):
+        return jnp.full((m_pad,) + x.shape[1:], fill, x.dtype).at[:m].set(x)
+
+    ax = padm(a_xyz)
+    bx = padm(b_xyz)
+    acd = padm(a_cd2)[:, None]
+    bcd = padm(b_cd2)[:, None]
+    ai = padm(a_idx.astype(jnp.int32), -1)[:, None]
+    bi = padm(b_idx.astype(jnp.int32), -1)[:, None]
+    # Padded edges get w2 = -inf so nothing can ever be "inside" their lune.
+    w = jnp.full((m_pad,), -jnp.inf, jnp.float32).at[:m].set(w2.astype(jnp.float32))[:, None]
+    pts = jnp.zeros((n_pad, d), points.dtype).at[:n].set(points)
+    pcd = jnp.zeros((n_pad,), jnp.float32).at[:n].set(cd2.astype(jnp.float32))[:, None]
+
+    grid = (m_pad // block_e, n_pad // block_c)
+    kernel = functools.partial(
+        _lune_filter_kernel, block_e=block_e, block_c=block_c, n_total=n
+    )
+    e_spec = lambda blk: pl.BlockSpec(blk, lambda i, j: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            e_spec((block_e, d)),
+            e_spec((block_e, d)),
+            e_spec((block_e, 1)),
+            e_spec((block_e, 1)),
+            e_spec((block_e, 1)),
+            e_spec((block_e, 1)),
+            e_spec((block_e, 1)),
+            pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_c, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=e_spec((block_e, 1)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ax, bx, acd, bcd, ai, bi, w, pts, pcd)
+    return out[:m, 0].astype(bool)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth that the corresponding kernel is
+tested against (tests/test_kernels.py sweeps shapes and dtypes and asserts
+allclose / exact index agreement).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_d2_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(n, d) x (m, d) -> (n, m) squared Euclidean distances, fp32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = (
+        jnp.sum(x * x, -1)[:, None]
+        + jnp.sum(y * y, -1)[None, :]
+        - 2.0 * x @ y.T
+    )
+    return jnp.maximum(d2, 0.0)
+
+
+def knn_ref(x: jax.Array, k_top: int) -> tuple[jax.Array, jax.Array]:
+    """Exact kNN oracle: full matrix + top_k. (d2 ascending, idx), self excluded."""
+    n = x.shape[0]
+    d2 = pairwise_d2_ref(x, x)
+    d2 = d2.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, k_top)
+    return -neg, idx
+
+
+def lune_filter_ref(
+    a_xyz, b_xyz, a_cd2, b_cd2, a_idx, b_idx, w2, points, cd2
+) -> jax.Array:
+    """Oracle for lune_filter: (m,) bool, True = some point strictly inside lune.
+
+    Applies the same norm-scaled cancellation margin as the kernel (see
+    lune_filter.py): numeric noise may only KEEP edges, never drop them.
+    """
+    d2_ac = pairwise_d2_ref(a_xyz, points)          # (m, n)
+    d2_bc = pairwise_d2_ref(b_xyz, points)
+    mrd_ac = jnp.maximum(jnp.maximum(d2_ac, a_cd2[:, None]), cd2[None, :])
+    mrd_bc = jnp.maximum(jnp.maximum(d2_bc, b_cd2[:, None]), cd2[None, :])
+    eps = jnp.float32(64.0 * 1.1920929e-07)
+    an = jnp.sum(a_xyz.astype(jnp.float32) ** 2, -1)[:, None]
+    bn = jnp.sum(b_xyz.astype(jnp.float32) ** 2, -1)[:, None]
+    cn = jnp.sum(points.astype(jnp.float32) ** 2, -1)[None, :]
+    col = jnp.arange(points.shape[0])[None, :]
+    is_ep = (col == a_idx[:, None]) | (col == b_idx[:, None])
+    inside = (
+        jnp.maximum(mrd_ac + eps * (an + cn), mrd_bc + eps * (bn + cn))
+        < w2[:, None]
+    ) & ~is_ep
+    return jnp.any(inside, axis=1)

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+Proof obligations per the task:
+  * 16x16 single-pod AND 2x16x16 multi-pod meshes compile for every cell
+    (ShapeDtypeStruct inputs; nothing is allocated);
+  * memory_analysis() printed (fits-in-HBM evidence);
+  * cost_analysis() + loop-aware HLO stats recorded for §Roofline.
+
+The XLA_FLAGS line above MUST run before any other import touches jax.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch kimi_k2_1t_a32b \
+      --shape train_4k --mesh single --rules '{"embed": null}'
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.dist import sharding as shardlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_init, get_model
+from repro.train import optim as optim_mod
+from repro.train.step import make_train_step
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    sh = SHAPES[shape_name]
+    s_len, gb, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if kind == "train":
+        if cfg.arch == "encdec":
+            dec = max(1, int(s_len * cfg.dec_seq_frac))
+            return {
+                "frames": jax.ShapeDtypeStruct((gb, s_len, cfg.frontend_dim), f32),
+                "dec_tokens": jax.ShapeDtypeStruct((gb, dec), i32),
+                "dec_labels": jax.ShapeDtypeStruct((gb, dec), i32),
+                "dec_mask": jax.ShapeDtypeStruct((gb, dec), f32),
+            }
+        if cfg.frontend == "patches":
+            n_text = s_len - cfg.frontend_tokens_4k
+            return {
+                "tokens": jax.ShapeDtypeStruct((gb, n_text), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (gb, cfg.frontend_tokens_4k, cfg.frontend_dim), f32),
+                "labels": jax.ShapeDtypeStruct((gb, n_text), i32),
+                "mask": jax.ShapeDtypeStruct((gb, n_text), f32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((gb, s_len), i32),
+            "labels": jax.ShapeDtypeStruct((gb, s_len), i32),
+            "mask": jax.ShapeDtypeStruct((gb, s_len), f32),
+        }
+
+    if kind == "prefill":
+        if cfg.arch == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((gb, s_len, cfg.frontend_dim), f32)}
+        if cfg.frontend == "patches":
+            n_text = s_len - cfg.frontend_tokens_4k
+            return {
+                "tokens": jax.ShapeDtypeStruct((gb, n_text), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (gb, cfg.frontend_tokens_4k, cfg.frontend_dim), f32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((gb, s_len), i32)}
+
+    # decode: cache + one token
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, gb, s_len))
+    return {
+        "cache": cache,
+        "cur_tokens": jax.ShapeDtypeStruct((gb, 1), i32),
+    }
+
+
+def prefill_batch_for(cfg, shape_name):
+    sh = SHAPES[shape_name]
+    return min(sh["global_batch"], sh["global_batch"])
+
+
+def build_step(cfg, shape_name: str, mesh, rules):
+    """Returns (jitted_fn, example_args_SDS, donate) ready to .lower()."""
+    kind = SHAPES[shape_name]["kind"]
+    model = get_model(cfg)
+    params_sds, specs = abstract_init(cfg)
+    p_shard = shardlib.tree_shardings(specs, mesh, rules)
+
+    def with_ctx(fn):
+        def wrapped(*a, **k):
+            with shardlib.activation_context(mesh, rules):
+                return fn(*a, **k)
+        return wrapped
+
+    if kind == "train":
+        opt_cfg = optim_mod.OptConfig(state_dtype=cfg.optimizer_state_dtype)
+        opt_init, _ = optim_mod.make_optimizer(opt_cfg)
+        opt_sds = jax.eval_shape(opt_init, params_sds)
+        opt_shard = shardlib.opt_state_shardings(p_shard, opt_sds, mesh)
+        batch_sds = input_specs(cfg, shape_name)
+        b_shard = shardlib.batch_shardings(batch_sds, mesh)
+        step_fn = with_ctx(make_train_step(cfg, opt_cfg))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        repl = NamedSharding(mesh, P())
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, {"loss": repl, "lr": repl, "grad_norm": repl}),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (params_sds, opt_sds, batch_sds)
+
+    if kind == "prefill":
+        ins = input_specs(cfg, shape_name)
+        s_len = SHAPES[shape_name]["seq_len"]
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def prefill_fn(params, batch):
+            if cfg.arch == "encdec":
+                return model.prefill(params, cfg, batch["frames"], max_len=s_len)
+            if cfg.frontend == "patches":
+                return model.prefill(
+                    params, cfg, batch["tokens"], max_len=s_len,
+                    patch_embeds=batch["patch_embeds"])
+            return model.prefill(params, cfg, batch["tokens"], max_len=s_len)
+
+        b_shard = shardlib.batch_shardings(ins, mesh)
+        cache_sds = jax.eval_shape(
+            lambda p, b: prefill_fn(p, b), params_sds, ins)[1]
+        c_shard = shardlib.cache_shardings(cache_sds, mesh)
+        logits_shard = shardlib.batch_shardings(
+            {"l": jax.ShapeDtypeStruct((SHAPES[shape_name]["global_batch"],), jnp.float32)},
+            mesh)["l"]
+        jitted = jax.jit(
+            with_ctx(prefill_fn),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_shard, c_shard),
+        )
+        return jitted, (params_sds, ins)
+
+    # decode
+    ins = input_specs(cfg, shape_name)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    c_shard = shardlib.cache_shardings(ins["cache"], mesh)
+    tok_shard = shardlib.batch_shardings({"t": ins["cur_tokens"]}, mesh)["t"]
+    logits_shard = tok_shard
+
+    def serve_step(params, cache, cur):
+        return model.decode_step(params, cfg, cache, cur)
+
+    jitted = jax.jit(
+        with_ctx(serve_step),
+        in_shardings=(p_shard, c_shard, tok_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_sds, ins["cache"], ins["cur_tokens"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
+             rules_override=None, keep_hlo: bool = False, tag: str = ""):
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.run_long_500k:
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "status": "skipped", "note": cfg.skip_note,
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shardlib.resolve_rules(mesh, rules_override)
+    t0 = time.time()
+    jitted, args = build_step(cfg, shape_name, mesh, rules)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else (ca or {})
+    hlo = compiled.as_text()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    from benchmarks import hlo_utils
+
+    stats = hlo_utils.analyze_hlo(hlo)
+    n_chips = 512 if multi_pod else 256
+    terms = hlo_utils.roofline_terms(stats, n_chips)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+            "output_bytes_per_device": int(ma.output_size_in_bytes),
+            "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+            "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+        },
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+        },
+        "hlo_stats": {
+            "flops_per_device": stats.flops,
+            "hbm_bytes_per_device": stats.bytes_hbm,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collectives": stats.coll_bytes,
+            "unknown_trip_counts": stats.unknown_trip_counts,
+        },
+        "roofline": terms,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape_name}__{rec['mesh']}{tag}"
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if keep_hlo:
+            import gzip
+            with gzip.open(os.path.join(out_dir, name + ".hlo.gz"), "wt") as f:
+                f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--rules", default=None, help="JSON sharding-rule overrides")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch.replace("-", "_")]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    rules_override = json.loads(args.rules) if args.rules else None
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                try:
+                    rec = run_cell(arch, shape, mp, args.out, rules_override,
+                                   keep_hlo=args.keep_hlo, tag=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "multi" if mp else "single",
+                        "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                    }
+                    traceback.print_exc()
+                results.append(rec)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(
+                        f"[OK] {label}: compile {rec['t_compile_s']}s  "
+                        f"mem(temp) {rec['memory']['temp_bytes_per_device']/2**30:.2f} GiB/dev  "
+                        f"t_comp {r['t_compute_s']*1e3:.2f}ms t_mem {r['t_memory_s']*1e3:.2f}ms "
+                        f"t_coll {r['t_collective_s']*1e3:.2f}ms -> {r['dominant']}",
+                        flush=True,
+                    )
+                else:
+                    print(f"[{rec['status']}] {label}: {rec.get('note') or rec.get('error','')}",
+                          flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\n=== dry-run: {n_ok} ok / {n_skip} skipped / {n_fail} failed ===")
+    if args.out:
+        with open(os.path.join(args.out, "summary.json"), "w") as f:
+            json.dump(results, f, indent=1)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

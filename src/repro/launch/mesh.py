@@ -1,0 +1,27 @@
+"""Production mesh construction (function, NOT module-level constant — the
+dry-run sets XLA device-count flags before first jax init, and importing this
+module must never touch jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod single-pod, or 2x16x16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host actually has (tests / smoke runs)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh(
+        (data, model_axis),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

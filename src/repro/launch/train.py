@@ -1,0 +1,126 @@
+"""Training launcher: real steps on the host mesh, full fault-tolerance loop.
+
+Features exercised end-to-end (and by tests/test_train_loop.py):
+  * --arch <id> reduced or full configs, synthetic deterministic data
+  * checkpoint/auto-resume (atomic commit, async save)
+  * --preempt-after N: SIGTERM-style mid-run abort drill; a relaunch resumes
+    bit-exact from the last checkpoint (data pipeline is (seed, step)-pure)
+  * straggler detection log (metrics.StepTimer)
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_1_5b --reduced \
+      --steps 30 --ckpt-dir /tmp/ckpt --ckpt-every 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.dist import sharding as shardlib
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_model, init_params
+from repro.train import checkpoint as ckpt_lib
+from repro.train import data as data_lib
+from repro.train import metrics as metrics_lib
+from repro.train import optim as optim_mod
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log", default=None)
+    ap.add_argument("--preempt-after", type=int, default=0,
+                    help="simulate preemption: hard-exit after N steps")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, microbatch=1)
+    mesh = make_host_mesh()
+    rules = shardlib.resolve_rules(mesh)
+
+    opt_cfg = optim_mod.OptConfig(
+        lr=args.lr, warmup_steps=max(2, args.steps // 10),
+        total_steps=args.steps, state_dtype=cfg.optimizer_state_dtype,
+    )
+    opt_init, _ = optim_mod.make_optimizer(opt_cfg)
+    raw_step = make_train_step(cfg, opt_cfg)
+
+    def step_fn(params, opt_state, batch):
+        with shardlib.activation_context(mesh, rules):
+            return raw_step(params, opt_state, batch)
+
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    dcfg = data_lib.DataConfig(
+        seed=args.seed, vocab=cfg.vocab, seq_len=args.seq_len,
+        global_batch=args.global_batch,
+    )
+
+    start_step = 0
+    if args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir) is not None:
+        state, start_step = ckpt_lib.restore(args.ckpt_dir)
+        params, opt_state = state["params"], state["opt"]
+        params = jax.tree.map(
+            lambda x: jnp.asarray(x), params
+        )
+        opt_state = jax.tree.map(lambda x: jnp.asarray(x), opt_state)
+        # restore dtypes lost by npz roundtrip for int steps
+        opt_state["step"] = jnp.asarray(opt_state["step"], jnp.int32)
+        print(f"[resume] from step {start_step}", flush=True)
+    else:
+        params, _ = init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = opt_init(params)
+
+    logger = metrics_lib.JsonlLogger(args.log)
+    timer = metrics_lib.StepTimer()
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = data_lib.train_batch(dcfg, step)
+        with timer:
+            params, opt_state, m = jitted(params, opt_state, batch)
+            loss = float(m["loss"])
+        losses.append(loss)
+        line = logger.log(step, loss=loss, lr=m["lr"], grad_norm=m["grad_norm"],
+                          step_time=timer.last, straggler=timer.is_straggler)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step}: loss {loss:.4f} ({timer.last:.2f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt_lib.save(
+                args.ckpt_dir, step + 1,
+                {"params": params, "opt": opt_state},
+                blocking=False, meta={"arch": args.arch},
+            )
+        if args.preempt_after and (step + 1 - start_step) >= args.preempt_after:
+            ckpt_lib.wait_pending()
+            print(f"[preempt] hard exit at step {step + 1}", flush=True)
+            os._exit(42)
+
+    ckpt_lib.wait_pending()
+    if args.ckpt_dir:
+        ckpt_lib.save(args.ckpt_dir, args.steps, {"params": params, "opt": opt_state})
+    logger.close()
+    print(f"final loss: {losses[-1]:.4f} (first: {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Model zoo registry: cfg.arch -> module with a uniform surface.
+
+Every arch module exposes:
+  init(cfg, key) -> (params, specs)
+  forward(p, cfg, tokens|dec_tokens, <frontend input>) -> (hidden, aux_loss)
+  logits_fn(p, cfg, hidden) -> logits
+  init_cache(cfg, batch, max_len, [dtype]) -> cache pytree
+  prefill(p, cfg, <inputs>, max_len) -> (last_logits, cache)
+  decode_step(p, cfg, cache, cur_tokens) -> (logits, cache)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, griffin, layers, ssm, transformer
+from .transformer import abstract_init as _abstract_init_raw
+
+
+def _cast_params(cfg, params):
+    dt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if x.dtype == jnp.float32 else x, params
+    )
+
+
+def init_params(cfg, key):
+    """init + master-dtype cast (cfg.param_dtype)."""
+    mod = get_model(cfg)
+    params, specs = mod.init(cfg, key)
+    return _cast_params(cfg, params), specs
+
+
+def abstract_init(cfg):
+    """(ShapeDtypeStruct params in master dtype, specs) with zero allocation."""
+    mod = get_model(cfg)
+    shapes, specs = _abstract_init_raw(mod.init, cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, dt)
+        if x.dtype == jnp.float32
+        else x,
+        shapes,
+    )
+    return shapes, specs
+
+_REGISTRY = {
+    "transformer": transformer,
+    "mamba2": ssm,
+    "griffin": griffin,
+    "encdec": encdec,
+}
+
+
+def get_model(cfg):
+    return _REGISTRY[cfg.arch]
+
+
+__all__ = ["encdec", "griffin", "layers", "ssm", "transformer", "get_model", "abstract_init", "init_params"]

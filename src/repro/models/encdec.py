@@ -1,0 +1,237 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder consumes STUB audio-frame embeddings (B, S_enc, frontend_dim) — the
+modality frontend is out of scope per the task; the decoder is a causal text
+stack with cross-attention.  Both stacks scan over layers.
+
+Serving: encoder output K/V per decoder layer are precomputed at prefill and
+stay static during decode; the decoder self-attention cache grows as usual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers as L
+
+
+def _attn_init(key, cfg):
+    kk = jax.random.split(key, 4)
+    d = cfg.d_model
+    hq, hkv = cfg.n_heads * cfg.d_head, cfg.n_kv * cfg.d_head
+    p, s = {}, {}
+    p["wq"], s["wq"] = L.dense_init(kk[0], (d, hq), ("embed", "heads_dim"), jnp.float32)
+    p["wk"], s["wk"] = L.dense_init(kk[1], (d, hkv), ("embed", "kv_dim"), jnp.float32)
+    p["wv"], s["wv"] = L.dense_init(kk[2], (d, hkv), ("embed", "kv_dim"), jnp.float32)
+    p["wo"], s["wo"] = L.dense_init(kk[3], (hq, d), ("heads_dim", "embed"), jnp.float32)
+    return p, s
+
+
+def init(cfg, key):
+    ks = iter(jax.random.split(key, 16))
+    d = cfg.d_model
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.dense_init(
+        next(ks), (cfg.padded_vocab, d), ("vocab", "embed"), jnp.float32, scale=0.02
+    )
+    p["unembed"], s["unembed"] = L.dense_init(
+        next(ks), (cfg.padded_vocab, d), ("vocab", "embed"), jnp.float32, scale=0.02
+    )
+    p["proj_in"], s["proj_in"] = L.dense_init(
+        next(ks), (cfg.frontend_dim, d), ("frontend", "embed"), jnp.float32
+    )
+    p["enc_norm"], s["enc_norm"] = L.rmsnorm_init(d)
+    p["dec_norm"], s["dec_norm"] = L.rmsnorm_init(d)
+
+    def stack(initfn, count, base_key, extra=()):
+        outs = [initfn(jax.random.fold_in(base_key, i)) for i in range(count)]
+        params = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+        specs = jax.tree.map(
+            lambda sp: ("layers",) + sp,
+            outs[0][1],
+            is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(e, str) for e in v),
+        )
+        return params, specs
+
+    def enc_layer(k):
+        kk = jax.random.split(k, 2)
+        lp, ls = {}, {}
+        lp["ln1"], ls["ln1"] = L.rmsnorm_init(d)
+        lp["attn"], ls["attn"] = _attn_init(kk[0], cfg)
+        lp["ln2"], ls["ln2"] = L.rmsnorm_init(d)
+        lp["mlp"], ls["mlp"] = L.init_mlp(kk[1], cfg, cfg.d_ff)
+        return lp, ls
+
+    def dec_layer(k):
+        kk = jax.random.split(k, 3)
+        lp, ls = {}, {}
+        lp["ln1"], ls["ln1"] = L.rmsnorm_init(d)
+        lp["self_attn"], ls["self_attn"] = _attn_init(kk[0], cfg)
+        lp["ln_x"], ls["ln_x"] = L.rmsnorm_init(d)
+        lp["cross_attn"], ls["cross_attn"] = _attn_init(kk[1], cfg)
+        lp["ln2"], ls["ln2"] = L.rmsnorm_init(d)
+        lp["mlp"], ls["mlp"] = L.init_mlp(kk[2], cfg, cfg.d_ff)
+        return lp, ls
+
+    p["enc"], s["enc"] = stack(enc_layer, cfg.n_enc_layers, next(ks))
+    p["dec"], s["dec"] = stack(dec_layer, cfg.n_dec_layers, next(ks))
+    return p, s
+
+
+def _attn(pl, hq_in, hkv_in, cfg, q_pos, k_pos, causal, kv_valid=None, cache_kv=None,
+          use_rope=True):
+    b, sq, d = hq_in.shape
+    dt = hq_in.dtype
+    q = (hq_in @ pl["wq"].astype(dt)).reshape(b, sq, cfg.n_heads, cfg.d_head)
+    if cache_kv is None:
+        sk = hkv_in.shape[1]
+        k = (hkv_in @ pl["wk"].astype(dt)).reshape(b, sk, cfg.n_kv, cfg.d_head)
+        v = (hkv_in @ pl["wv"].astype(dt)).reshape(b, sk, cfg.n_kv, cfg.d_head)
+        if use_rope:
+            k = L.rope(k, k_pos[None, :], cfg.rope_theta)
+    else:
+        k, v = cache_kv
+    if use_rope:
+        q = L.rope(q, q_pos[None, :], cfg.rope_theta)
+    if causal:
+        o = L.attention(q, k, v, q_pos=q_pos, k_pos=k_pos, window=0, kv_valid=kv_valid)
+    else:
+        # bidirectional: run with positions shifted so the causal mask never
+        # bites (q_pos = max) while rope used real positions above
+        o = L.attention(
+            q, k, v,
+            q_pos=jnp.full_like(q_pos, 2**29), k_pos=jnp.zeros_like(k_pos),
+            window=0, kv_valid=kv_valid,
+        )
+    return o.reshape(b, sq, -1) @ pl["wo"].astype(dt), (k, v)
+
+
+def encode(p, cfg, frames):
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) @ p["proj_in"].astype(dt)
+    s_enc = x.shape[1]
+    pos = jnp.arange(s_enc, dtype=jnp.int32)
+
+    def body(x, pl):
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        h = L.rmsnorm(x, pl["ln1"])
+        o, _ = _attn(pl["attn"], h, h, cfg, pos, pos, causal=False)
+        x = x + o
+        h2 = L.rmsnorm(x, pl["ln2"])
+        x = x + L.mlp(pl["mlp"], h2, cfg, cfg.d_ff)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, p["enc"])
+    return L.rmsnorm(x, p["enc_norm"])
+
+
+def forward(p, cfg, dec_tokens, frames):
+    """Training forward: returns decoder hidden states (B, S_dec, D), aux=0."""
+    enc_out = encode(p, cfg, frames)
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embed"].astype(dt)[dec_tokens]
+    s_dec = dec_tokens.shape[1]
+    s_enc = enc_out.shape[1]
+    dpos = jnp.arange(s_dec, dtype=jnp.int32)
+    epos = jnp.arange(s_enc, dtype=jnp.int32)
+
+    def body(x, pl):
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        h = L.rmsnorm(x, pl["ln1"])
+        o, _ = _attn(pl["self_attn"], h, h, cfg, dpos, dpos, causal=True)
+        x = x + o
+        hx = L.rmsnorm(x, pl["ln_x"])
+        o, _ = _attn(pl["cross_attn"], hx, enc_out, cfg, dpos, epos,
+                     causal=False, use_rope=False)
+        x = x + o
+        h2 = L.rmsnorm(x, pl["ln2"])
+        x = x + L.mlp(pl["mlp"], h2, cfg, cfg.d_ff)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, p["dec"])
+    return L.rmsnorm(x, p["dec_norm"]), jnp.float32(0.0)
+
+
+def logits_fn(p, cfg, x):
+    return x @ p["unembed"].astype(x.dtype).T
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int | None = None,
+               dtype=jnp.bfloat16):
+    enc_len = enc_len or max_len
+    dec_len = max(1, int(max_len * cfg.dec_seq_frac))
+    return {
+        "k": jnp.zeros((cfg.n_dec_layers, batch, dec_len, cfg.n_kv, cfg.d_head), dtype),
+        "v": jnp.zeros((cfg.n_dec_layers, batch, dec_len, cfg.n_kv, cfg.d_head), dtype),
+        "xk": jnp.zeros((cfg.n_dec_layers, batch, enc_len, cfg.n_kv, cfg.d_head), dtype),
+        "xv": jnp.zeros((cfg.n_dec_layers, batch, enc_len, cfg.n_kv, cfg.d_head), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(p, cfg, frames, max_len: int, cache_dtype=jnp.bfloat16):
+    """Encode + precompute per-dec-layer cross K/V; empty self cache."""
+    enc_out = encode(p, cfg, frames)
+    b, s_enc, _ = enc_out.shape
+    dt = enc_out.dtype
+    epos = jnp.arange(s_enc, dtype=jnp.int32)
+
+    def body(_, pl):
+        k = (enc_out @ pl["cross_attn"]["wk"].astype(dt)).reshape(
+            b, s_enc, cfg.n_kv, cfg.d_head)
+        v = (enc_out @ pl["cross_attn"]["wv"].astype(dt)).reshape(
+            b, s_enc, cfg.n_kv, cfg.d_head)
+        return None, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    _, (xk, xv) = jax.lax.scan(body, None, p["dec"])
+    cache = init_cache(cfg, b, max_len, enc_len=s_enc, dtype=cache_dtype)
+    cache = dict(cache, xk=xk, xv=xv)
+    bos = jnp.zeros((b, 1), jnp.int32)
+    logits, cache = decode_step(p, cfg, cache, bos)
+    return logits, cache
+
+
+def decode_step(p, cfg, cache, cur_tokens):
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    x = p["embed"].astype(dt)[cur_tokens]
+    dec_len = cache["k"].shape[2]
+    s_enc = cache["xk"].shape[2]
+    positions = pos[None].astype(jnp.int32)
+    k_pos = jnp.arange(dec_len, dtype=jnp.int32)
+    epos = jnp.arange(s_enc, dtype=jnp.int32)
+    kv_valid = k_pos <= pos
+
+    def body(carry, pl):
+        x, cache, li = carry
+        h = L.rmsnorm(x, pl["ln1"])
+        _, (k_new, v_new) = _attn(pl["self_attn"], h, h, cfg, positions, positions, True)
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"][li], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"][li], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        cache = dict(
+            cache,
+            k=jax.lax.dynamic_update_index_in_dim(cache["k"], k_all, li, 0),
+            v=jax.lax.dynamic_update_index_in_dim(cache["v"], v_all, li, 0),
+        )
+        o, _ = _attn(pl["self_attn"], h, None, cfg, positions, k_pos, True,
+                     kv_valid, (k_all.astype(dt), v_all.astype(dt)))
+        x = x + o
+        hx = L.rmsnorm(x, pl["ln_x"])
+        o, _ = _attn(pl["cross_attn"], hx, None, cfg, positions, epos, False,
+                     None, (cache["xk"][li].astype(dt), cache["xv"][li].astype(dt)),
+                     use_rope=False)
+        x = x + o
+        h2 = L.rmsnorm(x, pl["ln2"])
+        x = x + L.mlp(pl["mlp"], h2, cfg, cfg.d_ff)
+        return (x, cache, li + 1), None
+
+    (x, cache, _), _ = jax.lax.scan(body, (x, cache, jnp.int32(0)), p["dec"])
+    x = L.rmsnorm(x, p["dec_norm"])
+    logits = logits_fn(p, cfg, x)
+    return logits[:, 0], dict(cache, pos=pos + 1)

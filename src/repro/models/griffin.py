@@ -1,0 +1,408 @@
+"""Griffin / RecurrentGemma: RG-LRU recurrent blocks + local attention, 1:2.
+
+Block pattern (R, R, A) repeating: two gated-linear-recurrence (RG-LRU)
+mixing blocks per local-MQA attention block; every mixing block is followed
+by a GeGLU MLP residual (Griffin layout).
+
+Scan strategy: the repeating PERIOD is the scan body (params stacked over
+n_periods), so the mixed R/R/A structure stays a compact HLO; remainder
+layers (26 = 3x8 + 2) are applied unrolled after the scan.
+
+Train-time recurrence: jax.lax.associative_scan over the sequence (parallel
+prefix for h_t = a_t * h_{t-1} + b_t).  Decode: O(1) state update; attention
+cache is a RING BUFFER of size window (the arch's long-context win: the
+long_500k cell carries a 2048-slot cache, not 500k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers as L
+
+_C_RGLRU = 8.0
+
+
+def _pattern(cfg):
+    pat = cfg.block_pattern or ("R", "R", "A")
+    period = len(pat)
+    n_periods = cfg.n_layers // period
+    remainder = tuple(pat[: cfg.n_layers - n_periods * period])
+    return pat, n_periods, remainder
+
+
+def _init_rglru_block(key, cfg):
+    kk = jax.random.split(key, 6)
+    d, w = cfg.d_model, cfg.d_model  # lru width = d_model
+    p, s = {}, {}
+    p["ln"], s["ln"] = L.rmsnorm_init(d)
+    p["wx"], s["wx"] = L.dense_init(kk[0], (d, w), ("embed", "lru"), jnp.float32)
+    p["wy"], s["wy"] = L.dense_init(kk[1], (d, w), ("embed", "lru"), jnp.float32)
+    p["conv_w"], s["conv_w"] = (
+        jax.random.normal(kk[2], (cfg.d_conv, w), jnp.float32) * 0.2,
+        ("conv", "lru"),
+    )
+    p["conv_b"], s["conv_b"] = jnp.zeros((w,), jnp.float32), ("lru",)
+    p["wr"], s["wr"] = L.dense_init(kk[3], (w, w), ("lru", "lru2"), jnp.float32)
+    p["wi"], s["wi"] = L.dense_init(kk[4], (w, w), ("lru", "lru2"), jnp.float32)
+    p["lam"], s["lam"] = (
+        jnp.linspace(-4.0, -9.0, w).astype(jnp.float32),
+        ("lru",),
+    )
+    p["wo"], s["wo"] = L.dense_init(kk[5], (w, d), ("lru", "embed"), jnp.float32)
+    return p, s
+
+
+def _init_attn_block(key, cfg):
+    kk = jax.random.split(key, 4)
+    d = cfg.d_model
+    hq, hkv = cfg.n_heads * cfg.d_head, cfg.n_kv * cfg.d_head
+    p, s = {}, {}
+    p["ln"], s["ln"] = L.rmsnorm_init(d)
+    p["wq"], s["wq"] = L.dense_init(kk[0], (d, hq), ("embed", "heads_dim"), jnp.float32)
+    p["wk"], s["wk"] = L.dense_init(kk[1], (d, hkv), ("embed", "kv_dim"), jnp.float32)
+    p["wv"], s["wv"] = L.dense_init(kk[2], (d, hkv), ("embed", "kv_dim"), jnp.float32)
+    p["wo"], s["wo"] = L.dense_init(kk[3], (hq, d), ("heads_dim", "embed"), jnp.float32)
+    return p, s
+
+
+def _init_mlp_block(key, cfg):
+    p, s = {}, {}
+    p["ln"], s["ln"] = L.rmsnorm_init(cfg.d_model)
+    mp, ms = L.init_mlp(key, cfg, cfg.d_ff)
+    p.update(mp)
+    s.update(ms)
+    return p, s
+
+
+def init(cfg, key):
+    pat, n_periods, remainder = _pattern(cfg)
+    ks = iter(jax.random.split(key, 16))
+    d = cfg.d_model
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.dense_init(
+        next(ks), (cfg.padded_vocab, d), ("vocab", "embed"), jnp.float32, scale=0.02
+    )
+    p["final_norm"], s["final_norm"] = L.rmsnorm_init(d)
+
+    def stack(initfn, count, base_key):
+        outs = [initfn(jax.random.fold_in(base_key, i), cfg) for i in range(count)]
+        params = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+        specs = jax.tree.map(
+            lambda sp: ("layers",) + sp,
+            outs[0][1],
+            is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(e, str) for e in v),
+        )
+        return params, specs
+
+    period = {}
+    period_s = {}
+    for slot, kind in enumerate(pat):
+        fn = _init_rglru_block if kind == "R" else _init_attn_block
+        period[f"mix{slot}"], period_s[f"mix{slot}"] = stack(fn, n_periods, next(ks))
+        period[f"mlp{slot}"], period_s[f"mlp{slot}"] = stack(
+            _init_mlp_block, n_periods, next(ks)
+        )
+    p["period"], s["period"] = period, period_s
+
+    rem, rem_s = {}, {}
+    for slot, kind in enumerate(remainder):
+        fn = _init_rglru_block if kind == "R" else _init_attn_block
+        rem[f"mix{slot}"], rem_s[f"mix{slot}"] = fn(next(ks), cfg)
+        rem[f"mlp{slot}"], rem_s[f"mlp{slot}"] = _init_mlp_block(next(ks), cfg)
+    p["remainder"], s["remainder"] = rem, rem_s
+    return p, s
+
+
+def _rglru(pl, h, state=None, single_step=False):
+    """Gated linear recurrence. h: (B,S,D). Returns (y, (conv_state, lru_state))."""
+    dt = h.dtype
+    x = h @ pl["wx"].astype(dt)
+    y_gate = jax.nn.gelu((h @ pl["wy"].astype(dt)), approximate=True)
+    conv_state = state[0] if state is not None else None
+    x, conv_new = _conv(pl, x, conv_state)
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ pl["wr"])
+    i = jax.nn.sigmoid(xf @ pl["wi"])
+    log_a = -_C_RGLRU * jax.nn.softplus(pl["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if single_step:
+        h_prev = state[1]
+        h_new = a[:, 0] * h_prev + b[:, 0]
+        out = h_new[:, None]
+        lru_new = h_new
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        out = hs
+        lru_new = hs[:, -1]
+    out = (out * y_gate.astype(jnp.float32)).astype(dt)
+    return out @ pl["wo"].astype(dt), (conv_new, lru_new)
+
+
+def _conv(pl, x, state):
+    k = pl["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * pl["conv_w"][i].astype(x.dtype) for i in range(k))
+    return out + pl["conv_b"].astype(x.dtype), xp[:, -(k - 1) :, :]
+
+
+def _attn(pl, h, cfg, positions, k_pos, kv_valid, cache_kv=None):
+    b, sq, d = h.shape
+    dt = h.dtype
+    q = (h @ pl["wq"].astype(dt)).reshape(b, sq, cfg.n_heads, cfg.d_head)
+    k = (h @ pl["wk"].astype(dt)).reshape(b, sq, cfg.n_kv, cfg.d_head)
+    v = (h @ pl["wv"].astype(dt)).reshape(b, sq, cfg.n_kv, cfg.d_head)
+    q = L.rope(q, positions[None, :], cfg.rope_theta)
+    k = L.rope(k, positions[None, :], cfg.rope_theta)
+    if cache_kv is not None:
+        k_all, v_all = cache_kv
+    else:
+        k_all, v_all = k, v
+    o = L.attention(
+        q, k_all, v_all, q_pos=positions, k_pos=k_pos,
+        window=cfg.window, kv_valid=kv_valid,
+    )
+    return o.reshape(b, sq, -1) @ pl["wo"].astype(dt), (k, v)
+
+
+def _apply_block(kind, mix_p, mlp_p, x, cfg, positions, state=None, single=False):
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    h = L.rmsnorm(x, mix_p["ln"])
+    if kind == "R":
+        out, new_state = _rglru(mix_p, h, state, single_step=single)
+    else:
+        out, kv = _attn(mix_p, h, cfg, positions, positions, None)
+        new_state = None
+    x = x + out
+    h2 = L.rmsnorm(x, mlp_p["ln"])
+    x = x + L.mlp({k: v for k, v in mlp_p.items() if k != "ln"}, h2, cfg, cfg.d_ff)
+    return x, new_state
+
+
+def forward(p, cfg, tokens, patch_embeds=None):
+    pat, n_periods, remainder = _pattern(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embed"].astype(dt)[tokens]
+    s_len = tokens.shape[1]
+    positions = jnp.arange(s_len, dtype=jnp.int32)
+
+    def body(x, period_params):
+        for slot, kind in enumerate(pat):
+            x, _ = _apply_block(
+                kind, period_params[f"mix{slot}"], period_params[f"mlp{slot}"],
+                x, cfg, positions,
+            )
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, p["period"])
+    for slot, kind in enumerate(remainder):
+        x, _ = _apply_block(
+            kind, p["remainder"][f"mix{slot}"], p["remainder"][f"mlp{slot}"],
+            x, cfg, positions,
+        )
+    x = L.rmsnorm(x, p["final_norm"])
+    return x, jnp.float32(0.0)
+
+
+def logits_fn(p, cfg, x):
+    return x @ p["embed"].astype(x.dtype).T
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Ring-buffer attention cache (window slots) + O(1) recurrent states."""
+    pat, n_periods, remainder = _pattern(cfg)
+    n_attn_p = sum(1 for k in pat if k == "A")
+    n_r_p = sum(1 for k in pat if k == "R")
+    win = min(cfg.window, max_len)
+    cache = {
+        "k": jnp.zeros((n_periods * n_attn_p, batch, win, cfg.n_kv, cfg.d_head), dtype),
+        "v": jnp.zeros((n_periods * n_attn_p, batch, win, cfg.n_kv, cfg.d_head), dtype),
+        "kpos": jnp.full((win,), -(2**30), jnp.int32),
+        "conv": jnp.zeros(
+            (n_periods * n_r_p + sum(1 for k in remainder if k == "R"),
+             batch, cfg.d_conv - 1, cfg.d_model), dtype),
+        "lru": jnp.zeros(
+            (n_periods * n_r_p + sum(1 for k in remainder if k == "R"),
+             batch, cfg.d_model), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    return cache
+
+
+def decode_step(p, cfg, cache, cur_tokens):
+    pat, n_periods, remainder = _pattern(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    x = p["embed"].astype(dt)[cur_tokens]
+    positions = pos[None].astype(jnp.int32)
+    win = cache["k"].shape[2]
+    slot = pos % win
+    kpos = cache["kpos"].at[slot].set(pos)
+
+    r_per_period = sum(1 for k in pat if k == "R")
+    a_per_period = sum(1 for k in pat if k == "A")
+
+    def period_body(carry, xs):
+        x, cache, pi = carry
+        pp = xs
+        ri = pi * r_per_period
+        ai = pi * a_per_period
+        for slot_i, kind in enumerate(pat):
+            mix_p = pp[f"mix{slot_i}"]
+            mlp_p = pp[f"mlp{slot_i}"]
+            h = L.rmsnorm(x, mix_p["ln"])
+            if kind == "R":
+                out, (conv_new, lru_new) = _rglru(
+                    mix_p, h, (cache["conv"][ri], cache["lru"][ri]), single_step=True
+                )
+                cache = dict(
+                    cache,
+                    conv=jax.lax.dynamic_update_index_in_dim(
+                        cache["conv"], conv_new.astype(cache["conv"].dtype), ri, 0),
+                    lru=jax.lax.dynamic_update_index_in_dim(cache["lru"], lru_new, ri, 0),
+                )
+                ri = ri + 1
+            else:
+                _, (k_new, v_new) = _attn(mix_p, h, cfg, positions, positions, None)
+                k_all = jax.lax.dynamic_update_slice(
+                    cache["k"][ai], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+                v_all = jax.lax.dynamic_update_slice(
+                    cache["v"][ai], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+                cache = dict(
+                    cache,
+                    k=jax.lax.dynamic_update_index_in_dim(cache["k"], k_all, ai, 0),
+                    v=jax.lax.dynamic_update_index_in_dim(cache["v"], v_all, ai, 0),
+                )
+                out, _ = _attn(
+                    mix_p, h, cfg, positions, kpos, kpos >= 0,
+                    (k_all.astype(dt), v_all.astype(dt)),
+                )
+                ai = ai + 1
+            x = x + out
+            h2 = L.rmsnorm(x, mlp_p["ln"])
+            x = x + L.mlp({k: v for k, v in mlp_p.items() if k != "ln"}, h2, cfg, cfg.d_ff)
+        return (x, cache, pi + 1), None
+
+    (x, cache, _), _ = jax.lax.scan(
+        period_body, (x, cache, jnp.int32(0)), p["period"]
+    )
+    rrem = n_periods * r_per_period
+    for slot_i, kind in enumerate(remainder):
+        mix_p = p["remainder"][f"mix{slot_i}"]
+        mlp_p = p["remainder"][f"mlp{slot_i}"]
+        h = L.rmsnorm(x, mix_p["ln"])
+        out, (conv_new, lru_new) = _rglru(
+            mix_p, h, (cache["conv"][rrem], cache["lru"][rrem]), single_step=True)
+        cache = dict(
+            cache,
+            conv=cache["conv"].at[rrem].set(conv_new.astype(cache["conv"].dtype)),
+            lru=cache["lru"].at[rrem].set(lru_new),
+        )
+        rrem += 1
+        x = x + out
+        h2 = L.rmsnorm(x, mlp_p["ln"])
+        x = x + L.mlp({k: v for k, v in mlp_p.items() if k != "ln"}, h2, cfg, cfg.d_ff)
+
+    x = L.rmsnorm(x, p["final_norm"])
+    logits = logits_fn(p, cfg, x)
+    return logits[:, 0], dict(cache, kpos=kpos, pos=pos + 1)
+
+
+def prefill(p, cfg, tokens, max_len: int, patch_embeds=None, cache_dtype=jnp.bfloat16):
+    """One forward pass that also collects decode states.
+
+    R blocks: conv tail + final LRU state (both fall out of the scan).
+    A blocks: the last `window` positions' K/V scattered into ring slots
+    (slot(p) = p % window), so decode continues the ring seamlessly.
+    """
+    pat, n_periods, remainder = _pattern(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embed"].astype(dt)[tokens]
+    s_len = tokens.shape[1]
+    positions = jnp.arange(s_len, dtype=jnp.int32)
+    win = min(cfg.window, max_len)
+    keep = min(win, s_len)
+    p_sel = jnp.arange(s_len - keep, s_len)
+    slots = p_sel % win
+
+    def ring(k):
+        """(B, S, Hkv, Dh) -> (B, win, Hkv, Dh) ring-indexed."""
+        out = jnp.zeros((k.shape[0], win) + k.shape[2:], cache_dtype)
+        return out.at[:, slots].set(k[:, p_sel].astype(cache_dtype))
+
+    def body(x, period_params):
+        states = {}
+        for slot_i, kind in enumerate(pat):
+            mix_p = period_params[f"mix{slot_i}"]
+            mlp_p = period_params[f"mlp{slot_i}"]
+            h = L.rmsnorm(x, mix_p["ln"])
+            if kind == "R":
+                out, (conv_new, lru_new) = _rglru(mix_p, h)
+                states[f"conv{slot_i}"] = conv_new.astype(cache_dtype)
+                states[f"lru{slot_i}"] = lru_new
+            else:
+                out, (k, v) = _attn(mix_p, h, cfg, positions, positions, None)
+                states[f"k{slot_i}"] = ring(k)
+                states[f"v{slot_i}"] = ring(v)
+            x = x + out
+            h2 = L.rmsnorm(x, mlp_p["ln"])
+            x = x + L.mlp(
+                {k_: v_ for k_, v_ in mlp_p.items() if k_ != "ln"}, h2, cfg, cfg.d_ff
+            )
+        return x, states
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, period_states = jax.lax.scan(body_fn, x, p["period"])
+
+    rem_conv, rem_lru = [], []
+    for slot_i, kind in enumerate(remainder):
+        mix_p = p["remainder"][f"mix{slot_i}"]
+        mlp_p = p["remainder"][f"mlp{slot_i}"]
+        h = L.rmsnorm(x, mix_p["ln"])
+        out, (conv_new, lru_new) = _rglru(mix_p, h)
+        rem_conv.append(conv_new.astype(cache_dtype))
+        rem_lru.append(lru_new)
+        x = x + out
+        h2 = L.rmsnorm(x, mlp_p["ln"])
+        x = x + L.mlp(
+            {k_: v_ for k_, v_ in mlp_p.items() if k_ != "ln"}, h2, cfg, cfg.d_ff
+        )
+
+    x = L.rmsnorm(x, p["final_norm"])
+    logits = logits_fn(p, cfg, x[:, -1:])
+
+    # assemble the cache in init_cache layout
+    r_slots = [i for i, k in enumerate(pat) if k == "R"]
+    a_slots = [i for i, k in enumerate(pat) if k == "A"]
+    # (n_periods, B, ...) per slot -> interleave to (n_periods * per, B, ...)
+    def interleave(names):
+        per = len(names)
+        stacked = jnp.stack([period_states[nm] for nm in names], axis=1)
+        return stacked.reshape((n_periods * per,) + stacked.shape[2:])
+
+    conv = interleave([f"conv{i}" for i in r_slots])
+    lru = interleave([f"lru{i}" for i in r_slots])
+    if rem_conv:
+        conv = jnp.concatenate([conv, jnp.stack(rem_conv)], axis=0)
+        lru = jnp.concatenate([lru, jnp.stack(rem_lru)], axis=0)
+    kc = interleave([f"k{i}" for i in a_slots])
+    vc = interleave([f"v{i}" for i in a_slots])
+    kpos = jnp.full((win,), -(2**30), jnp.int32).at[slots].set(p_sel.astype(jnp.int32))
+    cache = {
+        "k": kc, "v": vc, "kpos": kpos, "conv": conv, "lru": lru,
+        "pos": jnp.int32(s_len),
+    }
+    return logits[:, 0], cache

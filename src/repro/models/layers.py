@@ -1,0 +1,341 @@
+"""Shared model layers, pure-function style (params = plain pytrees).
+
+Conventions:
+  * every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+    params pytree with a tuple of *logical axis names* per array dimension —
+    the sharding-rule system (dist/sharding.py) maps those to mesh axes.
+  * compute dtype comes from the input; accumulation is f32 where it matters
+    (attention softmax, losses, routing).
+  * attention is the double-chunked online-softmax form (flash-style in pure
+    JAX): memory O(chunk^2) regardless of sequence length, which is what lets
+    prefill_32k lower without an S x S score tensor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, specs, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype) * scale, specs
+
+
+def rmsnorm_init(d):
+    return jnp.zeros((d,), jnp.float32), ("embed",)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta, rotary_dim=None):
+    """x: (..., S, H, D); positions: (..., S) int32. Applies RoPE in f32."""
+    d = rotary_dim or x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half)
+    )
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:d].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2, x[..., d:].astype(jnp.float32)], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (double-chunked online softmax; GQA; window; softcap)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.checkpoint, static_argnums=(6,))
+def _attn_inner(q, k, v, q_pos, k_pos, window, softcap, kv_valid=None):
+    # NOTE the jax.checkpoint: the flash-style invariant.  The (Sq x Sk)
+    # score/prob tiles are NOT saved for the backward pass — they are
+    # recomputed from (q, k, v, m, l), so attention memory stays O(tile)
+    # under autodiff instead of O(S^2) (the 229 GiB/device failure mode the
+    # first dry-run exposed).
+    """One (q-chunk x kv-chunk) tile. q: (B, Sq, Hq, D) k/v: (B, Sk, Hkv, D)."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    diff = q_pos[:, None] - k_pos[None, :]                     # (Sq, Sk)
+    mask = diff >= 0
+    mask = mask & (diff < window)
+    if kv_valid is not None:
+        mask = mask & kv_valid[None, :]
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                     # (b,h,g,q)
+    # guard fully-masked rows
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o, m_safe, l, jnp.isfinite(m)
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    q_pos,
+    k_pos,
+    window: jax.Array | int | None = None,
+    softcap: float = 0.0,
+    kv_valid=None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+):
+    """Causal (optionally windowed) GQA attention, chunked both ways.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D); q_pos: (Sq,), k_pos: (Sk,).
+    ``window`` may be a traced scalar (per-layer mixed local/global stacks
+    scan over it); ``window <= 0`` means unbounded (full causal).
+    kv_valid: optional (Sk,) bool (cache slots already written).
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    window = jnp.asarray(window if window is not None else 0, jnp.int32)
+    window = jnp.where(window <= 0, jnp.int32(2**30), window)
+
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", "act_seq", None, None))
+    v = constrain(v, ("act_batch", "act_seq", None, None))
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // kv_chunk)
+    # pad to chunk multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_chunk - sq), (0, 0), (0, 0)))
+    qpp = jnp.pad(q_pos, (0, nq * q_chunk - sq))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_chunk - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_chunk - sk), (0, 0), (0, 0)))
+    kpp = jnp.pad(k_pos, (0, nk * kv_chunk - sk), constant_values=2**30)
+    valid = kv_valid if kv_valid is not None else jnp.ones((sk,), bool)
+    validp = jnp.pad(valid, (0, nk * kv_chunk - sk))
+
+    def q_block(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, axis=1)
+        qpos_c = jax.lax.dynamic_slice_in_dim(qpp, qi * q_chunk, q_chunk)
+
+        def kv_step(carry, kj):
+            acc, m_run, l_run = carry
+            kc = jax.lax.dynamic_slice_in_dim(kp, kj * kv_chunk, kv_chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, kj * kv_chunk, kv_chunk, axis=1)
+            kpos_c = jax.lax.dynamic_slice_in_dim(kpp, kj * kv_chunk, kv_chunk)
+            val_c = jax.lax.dynamic_slice_in_dim(validp, kj * kv_chunk, kv_chunk)
+            o, m, l, any_valid = _attn_inner(
+                qc, kc, vc, qpos_c, kpos_c, window, softcap, val_c
+            )
+            m_new = jnp.maximum(m_run, m)
+            alpha = jnp.exp(m_run - m_new)
+            beta = jnp.where(any_valid, jnp.exp(m - m_new), 0.0)
+            acc = acc * alpha[..., None] + o * beta[..., None]
+            l_new = l_run * alpha + l * beta
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+        m0 = jnp.full((b, hkv, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        # (b, hkv, g, qc, d) -> (b, qc, hq, d)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, dh)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))                  # (nq, b, qc, hq, d)
+    out = constrain(out, (None, "act_batch", "act_seq", "act_heads", None))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, hq, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p, s = {}, {}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wi"], s["wi"] = dense_init(ks[0], (d, 2 * d_ff), ("embed", "ff2"), jnp.float32)
+        p["wo"], s["wo"] = dense_init(ks[1], (d_ff, d), ("ff", "embed"), jnp.float32)
+    else:
+        p["wi"], s["wi"] = dense_init(ks[0], (d, d_ff), ("embed", "ff"), jnp.float32)
+        p["wo"], s["wo"] = dense_init(ks[1], (d_ff, d), ("ff", "embed"), jnp.float32)
+        if cfg.mlp_bias:
+            p["bi"], s["bi"] = jnp.zeros((d_ff,), jnp.float32), ("ff",)
+            p["bo"], s["bo"] = jnp.zeros((d,), jnp.float32), ("embed",)
+    return p, s
+
+
+def mlp(p, x, cfg, d_ff):
+    dt = x.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        h = constrain(x @ p["wi"].astype(dt), ("act_batch", "act_seq", "act_ff"))
+        u, g = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu if cfg.act == "swiglu" else functools.partial(
+            jax.nn.gelu, approximate=True
+        )
+        return (act(g) * u) @ p["wo"].astype(dt)
+    h = constrain(x @ p["wi"].astype(dt), ("act_batch", "act_seq", "act_ff"))
+    if cfg.mlp_bias:
+        h = h + p["bi"].astype(dt)
+    h = jax.nn.gelu(h, approximate=True)
+    o = h @ p["wo"].astype(dt)
+    if cfg.mlp_bias:
+        o = o + p["bo"].astype(dt)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k routing, per-expert top-C capacity, EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg):
+    ks = jax.random.split(key, 5)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(ks[0], (d, e), ("embed", "experts"), jnp.float32)
+    p["wi"], s["wi"] = dense_init(ks[1], (e, d, 2 * f), ("experts", "embed", "ff2"), jnp.float32)
+    p["wo"], s["wo"] = dense_init(ks[2], (e, f, d), ("experts", "ff", "embed"), jnp.float32)
+    if cfg.n_shared:
+        fs = cfg.d_ff_expert * cfg.n_shared
+        p["shared_wi"], s["shared_wi"] = dense_init(ks[3], (d, 2 * fs), ("embed", "ff2"), jnp.float32)
+        p["shared_wo"], s["shared_wo"] = dense_init(ks[4], (fs, d), ("ff", "embed"), jnp.float32)
+    return p, s
+
+
+def moe(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D); returns (out, aux_loss).
+
+    Dispatch: per-expert top-C token selection among each token's top-k
+    experts (capacity-bounded, drop-on-overflow — GShard-style), realized as
+    gathers + one batched expert einsum + scatter-add combine.  Experts shard
+    over the 'model' mesh axis (expert parallelism); the scatter-add back to
+    the token stream is the EP combine collective under GSPMD.
+    """
+    b, s_len, d = x.shape
+    dt = x.dtype
+    t = b * s_len
+    xf = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                     # (T, E) f32
+    topv, _ = jax.lax.top_k(gates, k)
+    keep = gates >= topv[:, -1:]
+    gk = jnp.where(keep, gates, 0.0)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(keep.astype(jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * e * cfg.router_aux_weight
+
+    cap = int(max(1, math.ceil(t * k * cfg.capacity_factor / e)))
+    cap = min(cap, t)
+    gsel, idx = jax.lax.top_k(gk.T, cap)                        # (E, C)
+    xe = constrain(xf[idx], ("act_experts", None, "act_embed"))  # (E, C, D)
+    h = constrain(
+        jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt)),
+        ("act_experts", None, None),
+    )
+    u, g = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    y = constrain(
+        jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt)),
+        ("act_experts", None, "act_embed"),
+    )
+    y = y * gsel[..., None].astype(dt)
+    out = jnp.zeros((t, d), dt).at[idx.reshape(-1)].add(
+        y.reshape(-1, d), mode="drop"
+    )
+    out = constrain(out, ("act_batch", "act_embed"))
+
+    if cfg.n_shared:
+        hs = xf @ p["shared_wi"].astype(dt)
+        us, gs = jnp.split(hs, 2, axis=-1)
+        out = out + (jax.nn.silu(gs) * us) @ p["shared_wo"].astype(dt)
+    return out.reshape(b, s_len, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg):
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope + cfg.qk_rope
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (d, h * qk), ("embed", "heads_dim"), jnp.float32)
+    p["wdkv"], s["wdkv"] = dense_init(ks[1], (d, cfg.kv_lora), ("embed", "lora"), jnp.float32)
+    p["wkr"], s["wkr"] = dense_init(ks[2], (d, cfg.qk_rope), ("embed", "lora"), jnp.float32)
+    p["wuk"], s["wuk"] = dense_init(ks[3], (cfg.kv_lora, h * cfg.qk_nope), ("lora", "heads_dim"), jnp.float32)
+    p["wuv"], s["wuv"] = dense_init(ks[4], (cfg.kv_lora, h * cfg.v_head), ("lora", "heads_dim"), jnp.float32)
+    p["wo"], s["wo"] = dense_init(ks[5], (h * cfg.v_head, d), ("heads_dim", "embed"), jnp.float32)
+    return p, s
+
+
+def mla_expand_kv(p, ckv, k_rope, cfg, dt):
+    """Latent cache -> full K, V. ckv: (B, S, lora); k_rope: (B, S, qk_rope)."""
+    b, s_len, _ = ckv.shape
+    h = cfg.n_heads
+    k_nope = (ckv @ p["wuk"].astype(dt)).reshape(b, s_len, h, cfg.qk_nope)
+    v = (ckv @ p["wuv"].astype(dt)).reshape(b, s_len, h, cfg.v_head)
+    kr = jnp.broadcast_to(k_rope[:, :, None, :], (b, s_len, h, cfg.qk_rope))
+    k = jnp.concatenate([k_nope, kr.astype(dt)], axis=-1)
+    return k, v
+
+
+def mla_qkv(p, x, positions, cfg):
+    """Returns (q, ckv, k_rope): q rope-applied; latent parts for the cache."""
+    b, s_len, _ = x.shape
+    dt = x.dtype
+    h = cfg.n_heads
+    qk = cfg.qk_nope + cfg.qk_rope
+    q = (x @ p["wq"].astype(dt)).reshape(b, s_len, h, qk)
+    q_nope, q_rope = q[..., : cfg.qk_nope], q[..., cfg.qk_nope :]
+    q_rope = rope(q_rope, positions[None, :], cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    ckv = x @ p["wdkv"].astype(dt)                               # (B, S, lora)
+    k_rope = rope(
+        (x @ p["wkr"].astype(dt))[:, :, None, :], positions[None, :], cfg.rope_theta
+    )[:, :, 0, :]
+    return q, ckv, k_rope

@@ -1,0 +1,313 @@
+"""Mamba-2 (SSD, state-space duality) — attention-free LM.
+
+Chunked SSD algorithm (Dao & Gu 2024, §6): within a chunk the token mixing is
+the quadratic "attention-like" masked form (MXU-friendly (Q x Q) tiles); chunk
+states propagate through a tiny sequential scan of (H, N, P) tensors.  Exactly
+the blocked structure a TPU wants: all heavy math is batched einsums, the
+recurrence is O(S / chunk) scan steps.
+
+Decode carries (conv_state, ssm_state) — O(1) in sequence length, which is why
+the long_500k cell runs for this arch.
+
+Correctness oracle: tests/test_models_smoke.py checks the chunked form against
+the naive per-token recurrence on small shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers as L
+
+
+def init(cfg, key) -> tuple[dict, dict]:
+    ks = iter(jax.random.split(key, 8))
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.d_state
+    h = cfg.n_ssm_heads
+    conv_dim = di + 2 * n
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"], s["embed"] = L.dense_init(
+        next(ks), (cfg.padded_vocab, d), ("vocab", "embed"), jnp.float32, scale=0.02
+    )
+    p["final_norm"], s["final_norm"] = L.rmsnorm_init(d)
+
+    def layer_init(k):
+        kk = jax.random.split(k, 4)
+        lp, ls = {}, {}
+        lp["ln"], ls["ln"] = L.rmsnorm_init(d)
+        # in_proj -> [z (di), xBC (di + 2n), dt (h)]
+        lp["in_proj"], ls["in_proj"] = L.dense_init(
+            kk[0], (d, 2 * di + 2 * n + h), ("embed", "inner_all"), jnp.float32
+        )
+        lp["conv_w"], ls["conv_w"] = (
+            jax.random.normal(kk[1], (cfg.d_conv, conv_dim), jnp.float32) * 0.2,
+            ("conv", "inner"),
+        )
+        lp["conv_b"], ls["conv_b"] = jnp.zeros((conv_dim,), jnp.float32), ("inner",)
+        lp["a_log"], ls["a_log"] = (
+            jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+            ("ssm_heads",),
+        )
+        lp["d_skip"], ls["d_skip"] = jnp.ones((h,), jnp.float32), ("ssm_heads",)
+        lp["dt_bias"], ls["dt_bias"] = jnp.zeros((h,), jnp.float32), ("ssm_heads",)
+        lp["norm"], ls["norm"] = jnp.zeros((di,), jnp.float32), ("inner",)
+        lp["out_proj"], ls["out_proj"] = L.dense_init(
+            kk[2], (di, d), ("inner", "embed"), jnp.float32
+        )
+        return lp, ls
+
+    base = next(ks)
+    outs = [layer_init(jax.random.fold_in(base, i)) for i in range(cfg.n_layers)]
+    p["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+    p_specs = jax.tree.map(
+        lambda sp: ("layers",) + sp,
+        outs[0][1],
+        is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(e, str) for e in v),
+    )
+    s["layers"] = p_specs
+    return p, s
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv over seq. xbc: (B,S,C), w: (K,C). state: (B,K-1,C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i].astype(xbc.dtype) for i in range(k)
+    )
+    out = out + b.astype(xbc.dtype)
+    new_state = xp[:, -(k - 1) :, :]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, b_in, c_in, dt, a_log, chunk: int):
+    """Chunked SSD. x: (B,S,H,P); b_in/c_in: (B,S,N); dt: (B,S,H) (softplus'd).
+
+    Returns y: (B,S,H,P). ngroups=1 (B/C shared across heads).
+    """
+    bsz, s_len, h, p_dim = x.shape
+    n = b_in.shape[-1]
+    q = chunk
+    nc = s_len // q
+    a = -jnp.exp(a_log.astype(jnp.float32))                      # (H,)
+    da = dt.astype(jnp.float32) * a                              # (B,S,H)
+
+    xc = x.reshape(bsz, nc, q, h, p_dim)
+    bc = b_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dac = da.reshape(bsz, nc, q, h)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+
+    cum = jnp.cumsum(dac, axis=2)                                # (B,C,Q,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,C,Qi,Qj,H)
+    iq = jnp.arange(q)
+    causal = iq[:, None] >= iq[None, :]
+    cmask = causal[None, None, :, :, None]
+    # mask BEFORE exp: anti-causal entries have seg >> 0, exp overflows, and
+    # `where` does not stop the inf from poisoning the BACKWARD pass
+    decay = jnp.where(cmask, jnp.exp(jnp.where(cmask, seg, 0.0)), 0.0)
+
+    # within-chunk ("diagonal") term
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)               # (B,C,Qi,Qj)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]                # (B,C,Q,H,P)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, xdt)
+
+    # chunk-final states: S_c = sum_j exp(cum_last - cum_j) B_j (x_j dt_j)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,C,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, decay_out, xdt)
+
+    # inter-chunk recurrence over nc steps
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,C,H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                            # (B,H,N,P), (B,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, p_dim), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        scan_fn,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                   # (B,C,H,N,P)
+
+    # off-chunk ("low-rank") term: y_off_i = C_i . (exp(cum_i) * S_prev)
+    decay_in = jnp.exp(cum)                                      # (B,C,Q,H)
+    y_off = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, decay_in, s_prevs)
+
+    y = (y_diag + y_off).reshape(bsz, s_len, h, p_dim)
+    return y
+
+
+def _mixer(pl, h_in, cfg, conv_state=None, ssm_state=None, single_step=False):
+    """The Mamba2 mixer. Returns (y, new_conv_state, new_ssm_state)."""
+    dt_model = h_in.dtype
+    di, n, nh, pdim = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_head
+    proj = constrain(
+        h_in @ pl["in_proj"].astype(dt_model), ("act_batch", "act_seq", "act_ff")
+    )
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, new_conv = _causal_conv(xbc, pl["conv_w"], pl["conv_b"], conv_state)
+    x = xbc[..., :di]
+    b_in = xbc[..., di : di + n]
+    c_in = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + pl["dt_bias"])
+    bsz, s_len, _ = x.shape
+    xh = x.reshape(bsz, s_len, nh, pdim)
+
+    if single_step:
+        a = -jnp.exp(pl["a_log"].astype(jnp.float32))
+        dec = jnp.exp(dt[:, 0, :] * a)                           # (B,H)
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]   # (B,H,P)
+        s_new = ssm_state * dec[..., None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b_in[:, 0].astype(jnp.float32), xdt
+        )
+        y = jnp.einsum("bn,bhnp->bhp", c_in[:, 0].astype(jnp.float32), s_new)
+        y = y + pl["d_skip"][:, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(bsz, 1, di)
+        new_ssm = s_new
+    else:
+        pad = (-s_len) % cfg.ssd_chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+            c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        y = ssd_chunked(xh, b_in, c_in, dt, pl["a_log"], cfg.ssd_chunk)
+        y = y[:, :s_len] + pl["d_skip"][:, None] * xh[:, :s_len].astype(jnp.float32)
+        y = y.reshape(bsz, s_len, di)
+        new_ssm = None
+
+    y = L.rmsnorm(y.astype(dt_model) * jax.nn.silu(z), pl["norm"])
+    return y @ pl["out_proj"].astype(dt_model), new_conv, new_ssm
+
+
+def forward(p, cfg, tokens, patch_embeds=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embed"].astype(dt)[tokens]
+
+    def body(carry, pl):
+        x, aux = carry
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        h = L.rmsnorm(x, pl["ln"])
+        y, _, _ = _mixer(pl, h, cfg)
+        return (x + y, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), p["layers"])
+    x = L.rmsnorm(x, p["final_norm"])
+    return x, jnp.float32(0.0)
+
+
+def logits_fn(p, cfg, x):
+    return x @ p["embed"].astype(x.dtype).T
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    del max_len  # O(1) state
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.n_ssm_heads, cfg.d_state, cfg.ssm_head),
+            jnp.float32,
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(p, cfg, cache, cur_tokens):
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embed"].astype(dt)[cur_tokens]
+
+    def body(carry, pl):
+        x, cache, li = carry
+        h = L.rmsnorm(x, pl["ln"])
+        y, conv_new, ssm_new = _mixer(
+            pl, h, cfg, conv_state=cache["conv"][li], ssm_state=cache["ssm"][li],
+            single_step=True,
+        )
+        cache = dict(
+            cache,
+            conv=jax.lax.dynamic_update_index_in_dim(
+                cache["conv"], conv_new.astype(cache["conv"].dtype), li, 0),
+            ssm=jax.lax.dynamic_update_index_in_dim(cache["ssm"], ssm_new, li, 0),
+        )
+        return (x + y, cache, li + 1), None
+
+    (x, cache, _), _ = jax.lax.scan(body, (x, cache, jnp.int32(0)), p["layers"])
+    x = L.rmsnorm(x, p["final_norm"])
+    logits = logits_fn(p, cfg, x)
+    return logits[:, 0], dict(cache, pos=cache["pos"] + 1)
+
+
+def prefill(p, cfg, tokens, max_len: int, patch_embeds=None, cache_dtype=jnp.bfloat16):
+    """Prefill by running the chunked forward, then recomputing final states.
+
+    For the SSD arch the 'cache' is the O(1) (conv, ssm) state after the
+    prompt; we obtain it by a single forward pass that also returns states.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embed"].astype(dt)[tokens]
+    bsz, s_len = tokens.shape
+
+    def body(carry, pl):
+        x, _ = carry
+        h = L.rmsnorm(x, pl["ln"])
+        # full mixer + state extraction via one extra single-step-free pass:
+        dt_model = h.dtype
+        di, n, nh, pdim = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_head
+        proj = h @ pl["in_proj"].astype(dt_model)
+        z, xbc, dt_raw = _split_proj(cfg, proj)
+        xbc_c, conv_fin = _causal_conv(xbc, pl["conv_w"], pl["conv_b"])
+        xs = xbc_c[..., :di]
+        b_in = xbc_c[..., di : di + n]
+        c_in = xbc_c[..., di + n :]
+        dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + pl["dt_bias"])
+        xh = xs.reshape(bsz, s_len, nh, pdim)
+        pad = (-s_len) % cfg.ssd_chunk
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_p = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_p = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        y = ssd_chunked(xh_p, b_p, c_p, dt_p, pl["a_log"], cfg.ssd_chunk)
+        y = y[:, :s_len] + pl["d_skip"][:, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, s_len, di)
+        y = L.rmsnorm(y.astype(dt_model) * jax.nn.silu(z), pl["norm"])
+        y = y @ pl["out_proj"].astype(dt_model)
+        # final ssm state: recurrence once more over all tokens (cheap einsum
+        # form: state = sum_j decay(j..S) dt_j B_j x_j)
+        a = -jnp.exp(pl["a_log"].astype(jnp.float32))
+        da = dtv * a
+        rev_cum = jnp.cumsum(da[:, ::-1, :], axis=1)[:, ::-1, :] - da  # sum_{k>j} da_k
+        decay_to_end = jnp.exp(rev_cum + da)                            # include own dt? no:
+        decay_to_end = jnp.exp(rev_cum)                                 # exp(sum_{k>j} da_k)
+        xdt = xh.astype(jnp.float32) * dtv[..., None]
+        ssm_fin = jnp.einsum("bjn,bjh,bjhp->bhnp", b_in.astype(jnp.float32), decay_to_end, xdt)
+        return (x + y, None), (conv_fin.astype(cache_dtype), ssm_fin)
+
+    (x, _), (convs, ssms) = jax.lax.scan(body, (x, None), p["layers"])
+    x = L.rmsnorm(x, p["final_norm"])
+    logits = logits_fn(p, cfg, x[:, -1:])
+    cache = {"conv": convs, "ssm": ssms, "pos": jnp.int32(s_len)}
+    return logits[:, 0], cache

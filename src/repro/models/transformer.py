@@ -1,0 +1,514 @@
+"""Decoder-only transformer covering the dense / MoE / MLA / VLM archs.
+
+One scan-over-layers body handles every per-layer variation through scanned
+*data* rather than structural branches:
+  * mixed local:global attention (gemma3) — per-layer (window, rope_theta)
+    arrays are scan xs; the mask math treats window<=0 as unbounded.
+  * GQA/MQA — head replication handled inside layers.attention.
+  * MLA (deepseek) and MoE (deepseek, kimi) — selected statically per config
+    (uniform across layers, so the scan body stays structure-uniform).
+
+Params are plain pytrees; ``init`` returns (params, specs) where specs hold
+logical axis names per dim (see dist/sharding.py).  ``abstract_params`` gives
+ShapeDtypeStructs via eval_shape — the dry-run never allocates weights.
+
+KV cache layout (decode): single stacked arrays (L, B, Smax, Hkv, Dh) carried
+through the layer scan and updated in place with dynamic_update_slice — keeps
+the HLO compact and lets XLA alias the buffers (donated in serve_step).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers as L
+
+
+def _layer_windows_py(cfg) -> list[int]:
+    """Per-layer window sizes: 0 => full causal. Pure python (safe under
+    eval_shape tracing)."""
+    w = []
+    for i in range(cfg.n_layers):
+        if cfg.window and cfg.window_period and (i + 1) % cfg.window_period == 0:
+            w.append(0)                     # global layer
+        elif cfg.window:
+            w.append(cfg.window)
+        else:
+            w.append(0)
+    return w
+
+
+def _layer_windows(cfg, s_ref: int) -> jnp.ndarray:
+    return jnp.asarray(_layer_windows_py(cfg), jnp.int32)
+
+
+def _layer_thetas(cfg) -> jnp.ndarray:
+    t = []
+    for i in range(cfg.n_layers):
+        if (
+            cfg.rope_theta_global
+            and cfg.window_period
+            and (i + 1) % cfg.window_period == 0
+        ):
+            t.append(cfg.rope_theta_global)
+        else:
+            t.append(cfg.rope_theta)
+    return jnp.asarray(t, jnp.float32)
+
+
+def init(cfg, key) -> tuple[dict, dict]:
+    ks = iter(jax.random.split(key, 64))
+    d = cfg.d_model
+    use_mla = cfg.kv_lora > 0
+    use_moe = cfg.n_experts > 0
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+
+    p["embed"], s["embed"] = L.dense_init(
+        next(ks), (cfg.padded_vocab, d), ("vocab", "embed"), jnp.float32, scale=0.02
+    )
+    if not cfg.tie_embeddings:
+        p["unembed"], s["unembed"] = L.dense_init(
+            next(ks), (cfg.padded_vocab, d), ("vocab", "embed"), jnp.float32, scale=0.02
+        )
+    p["final_norm"], s["final_norm"] = L.rmsnorm_init(d)
+
+    if cfg.frontend:
+        p["proj_in"], s["proj_in"] = L.dense_init(
+            next(ks), (cfg.frontend_dim, d), ("frontend", "embed"), jnp.float32
+        )
+        p["proj_mid"], s["proj_mid"] = L.dense_init(
+            next(ks), (d, d), ("embed", "embed2"), jnp.float32
+        )
+
+    def stack(initfn, *args):
+        """Init per-layer params and stack along a leading 'layers' dim."""
+        base = next(ks)
+        outs = [initfn(jax.random.fold_in(base, i), *args) for i in range(cfg.n_layers)]
+        params = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+        specs = jax.tree.map(lambda sp: ("layers",) + sp, outs[0][1],
+                             is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(e, (str, type(None))) for e in v))
+        return params, specs
+
+    def attn_init(k):
+        kk = jax.random.split(k, 5)
+        ap, asp = {}, {}
+        hq = cfg.n_heads * cfg.d_head
+        hkv = cfg.n_kv * cfg.d_head
+        ap["wq"], asp["wq"] = L.dense_init(kk[0], (d, hq), ("embed", "heads_dim"), jnp.float32)
+        ap["wk"], asp["wk"] = L.dense_init(kk[1], (d, hkv), ("embed", "kv_dim"), jnp.float32)
+        ap["wv"], asp["wv"] = L.dense_init(kk[2], (d, hkv), ("embed", "kv_dim"), jnp.float32)
+        ap["wo"], asp["wo"] = L.dense_init(kk[3], (hq, d), ("heads_dim", "embed"), jnp.float32)
+        if cfg.qkv_bias:
+            ap["bq"], asp["bq"] = jnp.zeros((hq,), jnp.float32), ("heads_dim",)
+            ap["bk"], asp["bk"] = jnp.zeros((hkv,), jnp.float32), ("kv_dim",)
+            ap["bv"], asp["bv"] = jnp.zeros((hkv,), jnp.float32), ("kv_dim",)
+        return ap, asp
+
+    def block_init(k):
+        kk = jax.random.split(k, 4)
+        bp, bs = {}, {}
+        bp["ln1"], bs["ln1"] = L.rmsnorm_init(d)
+        bp["ln2"], bs["ln2"] = L.rmsnorm_init(d)
+        if use_mla:
+            bp["attn"], bs["attn"] = L.init_mla(kk[0], cfg)
+        else:
+            bp["attn"], bs["attn"] = attn_init(kk[0])
+        if use_moe:
+            bp["moe"], bs["moe"] = L.init_moe(kk[1], cfg)
+        else:
+            bp["mlp"], bs["mlp"] = L.init_mlp(kk[1], cfg, cfg.d_ff)
+        return bp, bs
+
+    p["layers"], s["layers"] = stack(block_init)
+    return p, s
+
+
+def abstract_init(init_fn, cfg):
+    """(ShapeDtypeStruct params, logical-axis specs) with zero allocation.
+
+    The specs are static python produced while tracing init under eval_shape
+    (captured by closure side effect), so big configs never touch memory.
+    """
+    box = {}
+
+    def go(key):
+        params, specs = init_fn(cfg, key)
+        box["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(go, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return shapes, box["specs"]
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(pl, h, cfg, positions, theta, window, k_pos, kv_valid, cache_kv=None):
+    """Standard GQA attention. Returns (out, (k_new, v_new)) for caching."""
+    b, sq, d = h.shape
+    dt = h.dtype
+    ap = pl["attn"]
+    q = h @ ap["wq"].astype(dt)
+    k = h @ ap["wk"].astype(dt)
+    v = h @ ap["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + ap["bq"].astype(dt)
+        k = k + ap["bk"].astype(dt)
+        v = v + ap["bv"].astype(dt)
+    q = q.reshape(b, sq, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, sq, cfg.n_kv, cfg.d_head)
+    v = v.reshape(b, sq, cfg.n_kv, cfg.d_head)
+    q = L.rope(q, positions[None, :], theta)
+    k = L.rope(k, positions[None, :], theta)
+    if cache_kv is not None:
+        k_all, v_all = cache_kv
+    else:
+        k_all, v_all = k, v
+    o = L.attention(
+        q, k_all, v_all,
+        q_pos=positions, k_pos=k_pos, window=window,
+        softcap=0.0, kv_valid=kv_valid,
+    )
+    out = o.reshape(b, sq, cfg.n_heads * cfg.d_head) @ ap["wo"].astype(dt)
+    return out, (k, v)
+
+
+def _mla_block(pl, h, cfg, positions, k_pos, kv_valid, cache_latent=None):
+    b, sq, d = h.shape
+    dt = h.dtype
+    ap = pl["attn"]
+    q, ckv, k_rope = L.mla_qkv(ap, h, positions, cfg)
+    if cache_latent is not None:
+        ckv_all, kr_all = cache_latent
+    else:
+        ckv_all, kr_all = ckv, k_rope
+    k, v = L.mla_expand_kv(ap, ckv_all, kr_all, cfg, dt)
+    # pad V up to the qk head dim for the shared attention primitive, then slice
+    o = L.attention(
+        q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - v.shape[-1]))),
+        q_pos=positions, k_pos=k_pos, window=0, kv_valid=kv_valid,
+    )[..., : cfg.v_head]
+    out = o.reshape(b, sq, cfg.n_heads * cfg.v_head) @ ap["wo"].astype(dt)
+    return out, (ckv, k_rope)
+
+
+def embed_inputs(p, cfg, tokens, patch_embeds=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embed"].astype(dt)[tokens]
+    if cfg.frontend and patch_embeds is not None:
+        pe = patch_embeds.astype(dt) @ p["proj_in"].astype(dt)
+        pe = jax.nn.gelu(pe) @ p["proj_mid"].astype(dt)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def forward(p, cfg, tokens, patch_embeds=None):
+    """Full-sequence forward -> final hidden states (B, S, D) and aux loss."""
+    x = embed_inputs(p, cfg, tokens, patch_embeds)
+    b, s_len, d = x.shape
+    positions = jnp.arange(s_len, dtype=jnp.int32)
+    windows = _layer_windows(cfg, s_len)
+    thetas = _layer_thetas(cfg)
+    use_mla = cfg.kv_lora > 0
+    use_moe = cfg.n_experts > 0
+
+    def body(carry, xs):
+        x, aux = carry
+        # barrier: stops XLA from hoisting the rmsnorm f32 upcast out of the
+        # backward loop as a full-residual-stack convert (10+ GiB at scale)
+        x = jax.lax.optimization_barrier(x)
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        pl, w, th = xs
+        h = L.rmsnorm(x, pl["ln1"])
+        if use_mla:
+            attn_out, _ = _mla_block(pl, h, cfg, positions, positions, None)
+        else:
+            attn_out, _ = _attn_block(pl, h, cfg, positions, th, w, positions, None)
+        x = x + attn_out
+        h2 = L.rmsnorm(x, pl["ln2"])
+        if use_moe:
+            mo, a = L.moe(pl["moe"], h2, cfg)
+            x = x + mo
+            aux = aux + a
+        else:
+            x = x + L.mlp(pl["mlp"], h2, cfg, cfg.d_ff)
+        return (x, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), (p["layers"], windows, thetas))
+    x = L.rmsnorm(x, p["final_norm"])
+    return x, aux
+
+
+def logits_fn(p, cfg, x):
+    dt = x.dtype
+    emb = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    logits = x @ emb.astype(dt).T
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_layout(cfg, max_len: int):
+    """Static split of layers into ring-buffer (local window) vs full-length
+    (global) cache groups.  §Perf hillclimb 2: a 1024-window local layer
+    holding a 524288-slot cache is pure HBM burn — 28/34 of gemma3's
+    long_500k cache; starcoder2's decode cache shrinks 8x the same way."""
+    windows = _layer_windows_py(cfg)
+    is_local = [0 < w < max_len for w in windows]
+    loc_idx, glob_idx = [], []
+    nl = ng = 0
+    for ll in is_local:
+        loc_idx.append(nl if ll else 0)
+        glob_idx.append(0 if ll else ng)
+        nl += int(ll)
+        ng += int(not ll)
+    win = min(cfg.window if cfg.window else max_len, max_len)
+    return is_local, loc_idx, glob_idx, nl, ng, max(win, 1)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Abstract-or-concrete KV cache pytree (ring buffers for local layers)."""
+    if cfg.kv_lora > 0:
+        return {
+            "ckv": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora), dtype),
+            "kr": jnp.zeros((cfg.n_layers, batch, max_len, cfg.qk_rope), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    _, _, _, nl, ng, win = _cache_layout(cfg, max_len)
+    hkv, dh = cfg.n_kv, cfg.d_head
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if nl:
+        cache["k_loc"] = jnp.zeros((nl, batch, win, hkv, dh), dtype)
+        cache["v_loc"] = jnp.zeros((nl, batch, win, hkv, dh), dtype)
+        cache["kpos_loc"] = jnp.full((win,), -(2**30), jnp.int32)
+    if ng:
+        cache["k"] = jnp.zeros((ng, batch, max_len, hkv, dh), dtype)
+        cache["v"] = jnp.zeros((ng, batch, max_len, hkv, dh), dtype)
+    return cache
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_step(p, cfg, cache, cur_tokens):
+    """One decode step. cur_tokens: (B, 1). Returns (logits, new_cache).
+
+    Local-window layers read/write a ring buffer (slot = pos % window);
+    global layers keep the full-length cache.  The per-layer choice is
+    STATIC (config), so homogeneous stacks skip the cond entirely.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    x = p["embed"].astype(dt)[cur_tokens]                        # (B, 1, D)
+    positions = pos[None].astype(jnp.int32)                      # (1,)
+    thetas = _layer_thetas(cfg)
+    use_mla = cfg.kv_lora > 0
+    use_moe = cfg.n_experts > 0
+
+    if use_mla:
+        max_len = cache["ckv"].shape[2]
+        k_pos = jnp.arange(max_len, dtype=jnp.int32)
+        kv_valid = k_pos <= pos
+
+        def body(carry, xs):
+            x, cache, li, aux = carry
+            pl, th = xs
+            h = L.rmsnorm(x, pl["ln1"])
+            _, ckv_new, kr_new = L.mla_qkv(pl["attn"], h, positions, cfg)
+            ckv_all = jax.lax.dynamic_update_slice(
+                cache["ckv"][li], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+            kr_all = jax.lax.dynamic_update_slice(
+                cache["kr"][li], kr_new.astype(cache["kr"].dtype), (0, pos, 0))
+            cache = dict(
+                cache,
+                ckv=jax.lax.dynamic_update_index_in_dim(cache["ckv"], ckv_all, li, 0),
+                kr=jax.lax.dynamic_update_index_in_dim(cache["kr"], kr_all, li, 0),
+            )
+            attn_out, _ = _mla_block(
+                pl, h, cfg, positions, k_pos, kv_valid, (ckv_all, kr_all))
+            x = x + attn_out
+            h2 = L.rmsnorm(x, pl["ln2"])
+            if use_moe:
+                mo, a = L.moe(pl["moe"], h2, cfg)
+                x = x + mo
+                aux = aux + a
+            else:
+                x = x + L.mlp(pl["mlp"], h2, cfg, cfg.d_ff)
+            return (x, cache, li + 1, aux), None
+
+        (x, cache, _, _), _ = jax.lax.scan(
+            body, (x, cache, jnp.int32(0), jnp.float32(0.0)),
+            (p["layers"], thetas),
+        )
+        x = L.rmsnorm(x, p["final_norm"])
+        cache = dict(cache, pos=pos + 1)
+        return logits_fn(p, cfg, x)[:, 0], cache
+
+    if "k" in cache:
+        max_len = cache["k"].shape[2]
+    else:
+        # ring-only cache: any max_len strictly above the window reproduces
+        # the layout the prefill used (if max_len == window the layer would
+        # have been global and "k" would exist)
+        max_len = cache["k_loc"].shape[2] + 1
+    is_local, loc_idx, glob_idx, nl, ng, win = _cache_layout(cfg, max_len)
+    windows = _layer_windows(cfg, max_len)
+
+    if nl:
+        slot = pos % win
+        kpos_loc = cache["kpos_loc"].at[slot].set(pos)
+        cache = dict(cache, kpos_loc=kpos_loc)
+        loc_valid = kpos_loc >= 0
+    if ng:
+        k_pos_g = jnp.arange(cache["k"].shape[2], dtype=jnp.int32)
+        g_valid = k_pos_g <= pos
+
+    def attend_local(cache, pl, h, th, w, li_l):
+        _, (k_new, v_new) = _attn_block(pl, h, cfg, positions, th, w, positions, None)
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k_loc"][li_l], k_new.astype(cache["k_loc"].dtype), (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v_loc"][li_l], v_new.astype(cache["v_loc"].dtype), (0, slot, 0, 0))
+        cache = dict(
+            cache,
+            k_loc=jax.lax.dynamic_update_index_in_dim(cache["k_loc"], k_all, li_l, 0),
+            v_loc=jax.lax.dynamic_update_index_in_dim(cache["v_loc"], v_all, li_l, 0),
+        )
+        out, _ = _attn_block(
+            pl, h, cfg, positions, th, w, cache["kpos_loc"], loc_valid,
+            (k_all.astype(dt), v_all.astype(dt)))
+        return out, cache
+
+    def attend_global(cache, pl, h, th, w, li_g):
+        _, (k_new, v_new) = _attn_block(pl, h, cfg, positions, th, w, positions, None)
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"][li_g], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"][li_g], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        cache = dict(
+            cache,
+            k=jax.lax.dynamic_update_index_in_dim(cache["k"], k_all, li_g, 0),
+            v=jax.lax.dynamic_update_index_in_dim(cache["v"], v_all, li_g, 0),
+        )
+        out, _ = _attn_block(
+            pl, h, cfg, positions, th, w, k_pos_g, g_valid,
+            (k_all.astype(dt), v_all.astype(dt)))
+        return out, cache
+
+    def body(carry, xs):
+        x, cache, aux = carry
+        pl, th, w, is_loc, li_l, li_g = xs
+        h = L.rmsnorm(x, pl["ln1"])
+        if nl and ng:
+            attn_out, cache = jax.lax.cond(
+                is_loc,
+                lambda c: attend_local(c, pl, h, th, w, li_l),
+                lambda c: attend_global(c, pl, h, th, w, li_g),
+                cache,
+            )
+        elif nl:
+            attn_out, cache = attend_local(cache, pl, h, th, w, li_l)
+        else:
+            attn_out, cache = attend_global(cache, pl, h, th, w, li_g)
+        x = x + attn_out
+        h2 = L.rmsnorm(x, pl["ln2"])
+        if use_moe:
+            mo, a = L.moe(pl["moe"], h2, cfg)
+            x = x + mo
+            aux = aux + a
+        else:
+            x = x + L.mlp(pl["mlp"], h2, cfg, cfg.d_ff)
+        return (x, cache, aux), None
+
+    xs = (
+        p["layers"], thetas, windows,
+        jnp.asarray(is_local, bool),
+        jnp.asarray(loc_idx, jnp.int32),
+        jnp.asarray(glob_idx, jnp.int32),
+    )
+    (x, cache, _), _ = jax.lax.scan(body, (x, cache, jnp.float32(0.0)), xs)
+    x = L.rmsnorm(x, p["final_norm"])
+    cache = dict(cache, pos=pos + 1)
+    return logits_fn(p, cfg, x)[:, 0], cache
+
+
+def prefill(p, cfg, tokens, max_len: int, patch_embeds=None, cache_dtype=jnp.bfloat16):
+    """Prefill a cache from a full prompt. Returns (last_logits, cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_inputs(p, cfg, tokens, patch_embeds)
+    b, s_len, d = x.shape
+    positions = jnp.arange(s_len, dtype=jnp.int32)
+    windows = _layer_windows(cfg, s_len)
+    thetas = _layer_thetas(cfg)
+    use_mla = cfg.kv_lora > 0
+    use_moe = cfg.n_experts > 0
+
+    def body(carry, xs):
+        x, aux = carry
+        pl, w, th = xs
+        h = L.rmsnorm(x, pl["ln1"])
+        if use_mla:
+            attn_out, (ckv, kr) = _mla_block(pl, h, cfg, positions, positions, None)
+            kv = (ckv.astype(cache_dtype), kr.astype(cache_dtype))
+        else:
+            attn_out, (k, v) = _attn_block(pl, h, cfg, positions, th, w, positions, None)
+            kv = (k.astype(cache_dtype), v.astype(cache_dtype))
+        x = x + attn_out
+        h2 = L.rmsnorm(x, pl["ln2"])
+        if use_moe:
+            mo, a = L.moe(pl["moe"], h2, cfg)
+            x = x + mo
+            aux = aux + a
+        else:
+            x = x + L.mlp(pl["mlp"], h2, cfg, cfg.d_ff)
+        return (x, aux), kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), kvs = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), (p["layers"], windows, thetas))
+    x = L.rmsnorm(x, p["final_norm"])
+    logits = logits_fn(p, cfg, x[:, -1:])
+    pad = max_len - s_len
+    if cfg.kv_lora > 0:
+        cache = {
+            "ckv": jnp.pad(kvs[0], ((0, 0), (0, 0), (0, pad), (0, 0))),
+            "kr": jnp.pad(kvs[1], ((0, 0), (0, 0), (0, pad), (0, 0))),
+            "pos": jnp.int32(s_len),
+        }
+    else:
+        is_local, loc_idx, glob_idx, nl, ng, win = _cache_layout(cfg, max_len)
+        cache = {"pos": jnp.int32(s_len)}
+        loc_layers = [i for i, ll in enumerate(is_local) if ll]
+        glob_layers = [i for i, ll in enumerate(is_local) if not ll]
+        if ng:
+            cache["k"] = jnp.pad(
+                kvs[0][jnp.asarray(glob_layers)], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(
+                kvs[1][jnp.asarray(glob_layers)], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        if nl:
+            keep = min(win, s_len)
+            p_sel = jnp.arange(s_len - keep, s_len)
+            slots = p_sel % win
+            k_l = kvs[0][jnp.asarray(loc_layers)]
+            v_l = kvs[1][jnp.asarray(loc_layers)]
+            zk = jnp.zeros((nl, b, win) + k_l.shape[3:], k_l.dtype)
+            cache["k_loc"] = zk.at[:, :, slots].set(k_l[:, :, p_sel])
+            cache["v_loc"] = zk.at[:, :, slots].set(v_l[:, :, p_sel])
+            cache["kpos_loc"] = jnp.full((win,), -(2**30), jnp.int32).at[slots].set(
+                p_sel.astype(jnp.int32))
+        return logits[:, 0], cache
+    return logits[:, 0], cache

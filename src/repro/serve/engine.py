@@ -1,0 +1,89 @@
+"""Minimal batched serving engine: prefill -> decode loop with sampling.
+
+Production posture without production scope: a fixed-batch continuous loop
+(join at prefill boundaries), greedy/temperature sampling, EOS early-exit
+mask, and jitted step functions shared across requests.  Used by
+examples/serve_lm.py and the serve smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import get_model
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0    # 0 => greedy
+    eos_id: int = 1
+
+
+class Engine:
+    def __init__(self, cfg, params, max_len: int = 512, cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.model = get_model(cfg)
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+
+        def _prefill(params, tokens):
+            return self.model.prefill(
+                params, cfg, tokens, max_len=max_len, cache_dtype=cache_dtype
+            )
+
+        def _decode(params, cache, cur, key, temperature):
+            logits, cache = self.model.decode_step(params, cfg, cache, cur)
+            greedy = jnp.argmax(logits, axis=-1)
+            sampled = jax.random.categorical(key, logits / jnp.maximum(temperature, 1e-6))
+            nxt = jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+            return nxt[:, None], cache
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def generate(self, requests: list[GenRequest], seed: int = 0) -> list[np.ndarray]:
+        """Batched generation; prompts are right-aligned padded to equal len."""
+        cfg = self.cfg
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with BOS=0
+        max_new = max(r.max_new_tokens for r in requests)
+        temp = float(requests[0].temperature)
+
+        t0 = time.monotonic()
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        outs = [np.asarray(nxt)]
+        key = jax.random.PRNGKey(seed)
+        done = np.zeros(b, bool)
+        for t in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            nxt, cache = self._decode(self.params, cache, nxt, sub, jnp.float32(temp))
+            cur = np.asarray(nxt)
+            outs.append(cur)
+            done |= (cur[:, 0] == np.array([r.eos_id for r in requests]))
+            if done.all():
+                break
+        dt = time.monotonic() - t0
+        gen = np.concatenate(outs, axis=1)
+        results = []
+        for i, r in enumerate(requests):
+            row = gen[i][: r.max_new_tokens]
+            eos = np.nonzero(row == r.eos_id)[0]
+            results.append(row[: eos[0] + 1] if len(eos) else row)
+        self.last_stats = {
+            "wall_s": dt,
+            "tokens": int(sum(len(r) for r in results)),
+            "tok_per_s": float(sum(len(r) for r in results) / max(dt, 1e-9)),
+        }
+        return results

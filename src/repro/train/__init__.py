@@ -1,0 +1,3 @@
+from . import checkpoint, data, metrics, optim, step
+
+__all__ = ["checkpoint", "data", "metrics", "optim", "step"]

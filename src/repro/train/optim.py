@@ -1,0 +1,229 @@
+"""Optimizers from scratch: AdamW (fp32 / bf16 / int8-blockwise states) and
+Adafactor, plus schedules and global-norm clipping.
+
+The int8-blockwise Adam state (per-256-element absmax scaling, bnb-style) is
+what makes the 1T-param cell fit 512 x 16GB chips (DESIGN.md §8) — quantized
+distributed optimizer state is a first-class config, not a hack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 32  # small enough that sharded last dims stay block-divisible
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * prog)
+    return cfg.lr * warm * cos
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantized tensors
+# ---------------------------------------------------------------------------
+
+
+def q8_compatible(shape) -> bool:
+    """Blockwise int8 states quantize along the LAST dim so the quantized
+    tensors keep the param's shape and therefore the param's SHARDING —
+    a flat-block layout would force an unsharded regather at decode time
+    (observed as 2.5 TiB/device f32 temps on the 1T config)."""
+    return len(shape) >= 1 and shape[-1] % _BLOCK == 0
+
+
+def _q8_zeros(shape):
+    nb = shape[-1] // _BLOCK
+    return {
+        "q": jnp.zeros(shape, jnp.int8),
+        "scale": jnp.zeros(shape[:-1] + (nb,), jnp.float32),
+    }
+
+
+def _q8_encode(x):
+    shape = x.shape
+    blocks = x.reshape(shape[:-1] + (shape[-1] // _BLOCK, _BLOCK)).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[..., None], 1e-20)).astype(jnp.int8)
+    return {"q": q.reshape(shape), "scale": scale}
+
+
+def _q8_decode(qt, shape):
+    q = qt["q"].reshape(shape[:-1] + (shape[-1] // _BLOCK, _BLOCK))
+    return (q.astype(jnp.float32) * qt["scale"][..., None]).reshape(shape)
+
+
+def _is_q8(x):
+    return isinstance(x, dict) and set(x.keys()) == {"q", "scale"}
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, cfg: OptConfig):
+    def zeros_like_state(p):
+        if cfg.state_dtype == "int8" and q8_compatible(p.shape):
+            return _q8_zeros(p.shape)
+        dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+        if cfg.state_dtype == "int8":
+            dt = jnp.bfloat16  # q8-incompatible (small) params fall back
+        return jnp.zeros(p.shape, dt)
+
+    is_leaf = lambda x: hasattr(x, "shape")  # noqa: E731
+    return {
+        "m": jax.tree.map(zeros_like_state, params),
+        "v": jax.tree.map(zeros_like_state, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    def upd_slice(p, g, m, v, ndim):
+        gf = g.astype(jnp.float32)
+        mf = _q8_decode(m, p.shape) if _is_q8(m) else m.astype(jnp.float32)
+        # v is quantized in SQRT domain: linear-absmax int8 on raw v flushes
+        # small entries in a block to zero, and m/(sqrt(0)+eps) explodes.
+        # sqrt-domain storage compresses the dynamic range quadratically
+        # (the same reason bnb 8-bit Adam uses a nonlinear quantile map).
+        vf = _q8_decode(v, p.shape) ** 2 if _is_q8(v) else v.astype(jnp.float32)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * gf
+        vf = cfg.b2 * vf + (1 - cfg.b2) * gf * gf
+        update = (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+        if ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        if _is_q8(m):
+            return newp, _q8_encode(mf), _q8_encode(jnp.sqrt(vf))
+        return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    def upd(p, g, m, v):
+        # layer-stacked params update one layer-slice at a time (lax.map):
+        # caps the f32 master/moment temporaries at 1/L of the tensor —
+        # the difference between ~90 GiB and ~10 GiB peak on the 1T config.
+        if p.ndim >= 3 and p.shape[0] > 1:
+            return jax.lax.map(
+                lambda args: upd_slice(*args, ndim=p.ndim), (p, g, m, v)
+            )
+        return upd_slice(p, g, m, v, p.ndim)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.flatten(grads)[0]
+    is_leaf = _is_q8
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_leaf)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_leaf)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment for >=2D params)
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params, cfg: OptConfig):
+    def zeros(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(zeros, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    d = 1.0 - cfg.b2
+
+    def upd(p, g, f):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if p.ndim >= 2:
+            vr = cfg.b2 * f["vr"] + d * jnp.mean(g2, axis=-1)
+            vc = cfg.b2 * f["vc"] + d * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30
+                )
+            )
+            update = gf / jnp.maximum(denom, 1e-30)
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = cfg.b2 * f["v"] + d * g2
+            update = gf / (jnp.sqrt(v) + cfg.eps)
+            newf = {"v": v}
+        newp = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return newp, newf
+
+    leaves_def = jax.tree.structure(params)
+    flat_p = jax.tree.leaves(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_f = leaves_def.flatten_up_to(state["f"])
+    out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_p = jax.tree.unflatten(leaves_def, [o[0] for o in out])
+    new_f = jax.tree.unflatten(leaves_def, [o[1] for o in out])
+    return new_p, {"f": new_f, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return (
+            functools.partial(adamw_init, cfg=cfg),
+            functools.partial(adamw_update, cfg=cfg),
+        )
+    if cfg.name == "adafactor":
+        return (
+            functools.partial(adafactor_init, cfg=cfg),
+            functools.partial(adafactor_update, cfg=cfg),
+        )
+    raise ValueError(cfg.name)

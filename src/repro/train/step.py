@@ -1,0 +1,123 @@
+"""Training step factory: chunked cross-entropy, microbatch grad-accum,
+loss masking, and the (pjit-ready) train_step used by launcher and dry-run.
+
+Memory discipline:
+  * cross-entropy is computed in sequence chunks (cfg.xent_chunk) so the
+    (B, S, V) logits tensor never materializes — at kimi scale that tensor
+    alone would be ~0.5 GB/device.
+  * gradients accumulate across `cfg.microbatch` slices inside a lax.scan,
+    which also lets XLA overlap the DP gradient reduce-scatter of slice i
+    with the compute of slice i+1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from ..models import get_model
+from . import optim as optim_mod
+
+
+def xent_chunked(logits_fn: Callable, p, cfg, hidden, labels, mask):
+    """Mean masked cross-entropy without materializing full logits.
+
+    hidden: (B, S, D); labels, mask: (B, S).
+    """
+    b, s_len, d = hidden.shape
+    chunk = min(cfg.xent_chunk, s_len)
+    n_chunks = -(-s_len // chunk)
+    pad = n_chunks * chunk - s_len
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, y_c, m_c = xs
+        logits = logits_fn(p, cfg, h_c.transpose(1, 0, 2)).astype(jnp.float32)
+        logits = constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, y_c.T[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        nll = (lse - ll) * m_c.T
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m_c)), None
+
+    hs = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 2, 0, 3)
+    ys = labels.reshape(b, n_chunks, chunk).transpose(1, 2, 0)
+    ms = mask.reshape(b, n_chunks, chunk).transpose(1, 2, 0)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ys, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(cfg):
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        if cfg.arch == "encdec":
+            hidden, aux = model.forward(params, cfg, batch["dec_tokens"], batch["frames"])
+            labels = batch["dec_labels"]
+            mask = batch.get("dec_mask", jnp.ones_like(labels, jnp.float32))
+        else:
+            hidden, aux = model.forward(
+                params, cfg, batch["tokens"], batch.get("patch_embeds")
+            )
+            labels = batch["labels"]
+            mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+            if cfg.frontend == "patches":
+                # hidden covers [patches | text]; loss only over text positions
+                hidden = hidden[:, -labels.shape[1] :]
+        loss = xent_chunked(model.logits_fn, params, cfg, hidden, labels, mask)
+        return loss + aux, {"xent": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: optim_mod.OptConfig):
+    """Returns train_step(params, opt_state, batch, rng) -> (params, opt_state, metrics).
+
+    batch leaves have a leading global-batch dim; grad accumulation splits it
+    into cfg.microbatch slices.
+    """
+    loss_fn = make_loss_fn(cfg)
+    _, opt_update = optim_mod.make_optimizer(opt_cfg)
+
+    def train_step(params, opt_state, batch):
+        micro = max(cfg.microbatch, 1)
+
+        def reshape_micro(x):
+            return x.reshape((micro, x.shape[0] // micro) + x.shape[1:])
+
+        mbatch = jax.tree.map(reshape_micro, batch)
+
+        acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+        def accum(carry, mb):
+            g_acc, l_acc = carry
+            mb = jax.tree.map(
+                lambda v: constrain(
+                    v, ("act_batch",) + ("act_seq",) * (v.ndim - 1)
+                ),
+                mb,
+            )
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            g_acc = jax.tree.map(
+                lambda a, g: a + (g.astype(acc_dt) / micro).astype(acc_dt), g_acc, grads
+            )
+            return (g_acc, l_acc + loss / micro), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (grads, loss), _ = jax.lax.scan(accum, (g0, jnp.float32(0.0)), mbatch)
+        new_params, new_opt, opt_metrics = opt_update(params, grads, opt_state)
+        metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step

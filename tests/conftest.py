@@ -1,0 +1,34 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own flags in a
+# subprocess); keep any user XLA_FLAGS out of the way.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def blobs():
+    rng = np.random.default_rng(42)
+    x = np.concatenate([
+        rng.normal((0, 0), 0.3, size=(80, 2)),
+        rng.normal((4, 0), 0.5, size=(80, 2)),
+        rng.normal((2, 4), 0.4, size=(60, 2)),
+        rng.uniform(-2, 6, size=(20, 2)),
+    ]).astype(np.float32)
+    gt = np.repeat([0, 1, 2, 3], [80, 80, 60, 20])
+    return x, gt
+
+
+@pytest.fixture(scope="session")
+def gauss16d():
+    rng = np.random.default_rng(7)
+    centers = rng.uniform(-8, 8, size=(6, 16))
+    x = np.concatenate(
+        [rng.normal(c, 1.0, size=(120, 16)) for c in centers]
+    ).astype(np.float32)
+    return x

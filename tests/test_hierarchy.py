@@ -1,0 +1,104 @@
+"""Hierarchy extraction: single-linkage vs scipy, condensed-tree semantics,
+full-pipeline label equivalence (RNG path vs dense-matrix path)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.cluster.hierarchy import linkage
+
+from repro.core import hierarchy, multi, ref as oref
+
+
+@st.composite
+def spanning_edges(draw):
+    n = draw(st.integers(5, 60))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    ea = np.arange(n - 1)
+    eb = np.array([rng.integers(i + 1, n) if i + 1 < n else n - 1 for i in range(n - 1)])
+    # random spanning tree: connect each node to a random earlier node
+    ea = np.array([rng.integers(0, i + 1) for i in range(n - 1)])
+    eb = np.arange(1, n)
+    w = rng.uniform(0.1, 5.0, size=n - 1)
+    return n, ea, eb, w
+
+
+@given(spanning_edges())
+@settings(max_examples=30, deadline=None)
+def test_single_linkage_matches_scipy(t):
+    n, ea, eb, w = t
+    Z = hierarchy.single_linkage(ea, eb, w, n)
+    # scipy needs a dense distance matrix consistent with the tree's metric:
+    # use the path-max distance implied by the MST (single-linkage ultrametric)
+    # instead just compare merge heights + sizes against scipy on the mst
+    # edge list converted to dense graph shortest-max-path: simpler check —
+    # merge DISTANCES multiset must equal edge weights, sizes must telescope.
+    np.testing.assert_allclose(np.sort(Z[:, 2]), np.sort(w))
+    assert Z[-1, 3] == n
+    assert (Z[:, 3] >= 2).all()
+
+
+def test_single_linkage_vs_scipy_dense(gauss16d):
+    x = gauss16d[:100].astype(np.float64)
+    m = oref.mrd_matrix(x, 4)
+    ea, eb, w = oref.mst_edges_dense(m)
+    Z_ours = hierarchy.single_linkage(ea, eb, w, len(x))
+    # scipy single linkage on the mrd matrix (condensed form)
+    from scipy.spatial.distance import squareform
+    Z_scipy = linkage(squareform(m, checks=False), method="single")
+    np.testing.assert_allclose(np.sort(Z_ours[:, 2]), np.sort(Z_scipy[:, 2]), rtol=1e-9)
+    # mrd ties are frequent; tied merges may interleave differently between
+    # implementations (both trees valid).  Sizes must match where heights are
+    # unique, and always at the top.
+    order_o = np.argsort(Z_ours[:, 2], kind="stable")
+    h_sorted = Z_ours[order_o, 2]
+    uniq = np.concatenate([[True], np.diff(h_sorted) > 1e-12]) & np.concatenate(
+        [np.diff(h_sorted) > 1e-12, [True]]
+    )
+    sizes_o = Z_ours[order_o, 3][uniq]
+    sizes_s = Z_scipy[np.argsort(Z_scipy[:, 2], kind="stable"), 3][uniq]
+    np.testing.assert_allclose(sizes_o, sizes_s)
+    assert Z_ours[-1, 3] == Z_scipy[-1, 3] == len(x)
+
+
+def test_condensed_tree_blobs(blobs):
+    x, gt = blobs
+    res = multi.multi_hdbscan(x, 12, variant="rng_star")
+    h = [hh for hh in res.hierarchies if hh.mpts == 6][0]
+    assert h.n_clusters == 3
+    # each true blob maps to exactly one predicted cluster (majority)
+    for blob_id, size in ((0, 80), (1, 80), (2, 60)):
+        labs = h.labels[gt == blob_id]
+        labs = labs[labs >= 0]
+        vals, counts = np.unique(labs, return_counts=True)
+        assert counts.max() / size > 0.9
+
+
+def test_full_pipeline_equals_dense_pipeline(blobs):
+    """Same extraction code fed by (a) the RNG MST and (b) the dense-matrix
+    MST must produce identical labels (Cor. 1 at the *label* level)."""
+    x, _ = blobs
+    kmax = 10
+    res = multi.multi_hdbscan(x, kmax, variant="rng")
+    cd = oref.core_distances(x.astype(np.float64), kmax)
+    for h in res.hierarchies[::3]:
+        m = oref.mrd_matrix(x.astype(np.float64), h.mpts, cd)
+        ea, eb, w = oref.mst_edges_dense(m)
+        labels_dense, _, _ = hierarchy.hdbscan_labels(
+            ea, eb, w, len(x), max(2, h.mpts)
+        )
+        # label ids may permute; compare partitions via contingency
+        a, b = h.labels, labels_dense
+        assert (a >= 0).sum() == (b >= 0).sum()
+        for ca in np.unique(a[a >= 0]):
+            members = b[a == ca]
+            vals, counts = np.unique(members, return_counts=True)
+            assert counts.max() / counts.sum() > 0.99
+
+
+def test_stability_monotone_selection(blobs):
+    x, _ = blobs
+    res = multi.multi_hdbscan(x, 8, variant="rng_star")
+    h = res.hierarchies[-1]
+    stab = h.stability
+    assert all(v >= 0 or np.isinf(v) for v in stab.values())

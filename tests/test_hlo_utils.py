@@ -1,0 +1,56 @@
+"""Roofline HLO analyzer: validated against a program with KNOWN flops."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import hlo_utils
+
+
+def test_scan_flops_counted_with_trip_count():
+    """L matmuls inside a scan must count L times (cost_analysis counts 1)."""
+    L, M, K, N = 7, 64, 128, 32
+
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    ws = jnp.zeros((L, K, K), jnp.float32)
+    x = jnp.zeros((M, K), jnp.float32)
+    compiled = jax.jit(f).lower(ws, x).compile()
+    stats = hlo_utils.analyze_hlo(compiled.as_text())
+    want = 2 * M * K * K * L
+    assert stats.unknown_trip_counts == 0
+    # tanh etc add nothing to dot flops; tolerance for XLA rewrites
+    assert 0.9 * want <= stats.flops <= 1.3 * want, (stats.flops, want)
+
+
+def test_plain_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    stats = hlo_utils.analyze_hlo(compiled.as_text())
+    want = 2 * 128 * 256 * 64
+    assert 0.99 * want <= stats.flops <= 1.01 * want
+
+
+def test_bytes_scale_with_sizes():
+    def f(x):
+        return (x * 2.0 + 1.0).sum()
+
+    small = jax.jit(f).lower(jnp.zeros((1000,))).compile()
+    big = jax.jit(f).lower(jnp.zeros((100000,))).compile()
+    s1 = hlo_utils.analyze_hlo(small.as_text()).bytes_hbm
+    s2 = hlo_utils.analyze_hlo(big.as_text()).bytes_hbm
+    assert s2 > 10 * s1
+
+
+def test_roofline_terms_shape():
+    stats = hlo_utils.HloStats(flops=197e12, bytes_hbm=819e9, coll_bytes={"all-reduce": 49.5e9})
+    t = hlo_utils.roofline_terms(stats, 1)
+    np.testing.assert_allclose(t["t_compute_s"], 1.0)
+    np.testing.assert_allclose(t["t_memory_s"], 1.0)
+    np.testing.assert_allclose(t["t_collective_s"], 1.0)

@@ -1,0 +1,119 @@
+"""Machine-checks of the paper's theorems and of the metric properties.
+
+  * mrd symmetry + triangle inequality (Thm 1's prerequisites) — hypothesis
+  * core-distance monotonicity in mpts (Thm 2's prerequisite)
+  * exact RNG == naive O(n^3) oracle (Def. 1)
+  * Thm 2: RNG^i subseteq RNG^kmax for i < kmax (oracle-level)
+  * Cor. 1: per-mpts MST weight multisets from RNG^kmax == complete graph's
+    (MST weight multiset is unique for a graph => correct even under ties)
+  * RNG containment chain: rng subseteq rng_star subseteq rng_ss
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import kernels
+from repro.core import mrd as mrd_mod
+from repro.core import multi, ref as oref
+from repro.core import rng as rng_mod
+
+
+@st.composite
+def point_sets(draw):
+    n = draw(st.integers(12, 40))
+    d = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.normal(scale=draw(st.floats(0.5, 10.0)), size=(n, d))
+
+
+@given(point_sets(), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_mrd_metric_properties(x, mpts):
+    mpts = min(mpts, len(x))
+    m = oref.mrd_matrix(x, mpts)
+    # symmetry
+    np.testing.assert_allclose(m, m.T)
+    # triangle inequality (Thm 1 proof): mrd(a,c) <= mrd(a,b) + mrd(b,c)
+    lhs = m[:, None, :]                      # (a, 1, c)
+    rhs = m[:, :, None] + m[None, :, :]      # (a, b) + (b, c)
+    assert (lhs <= rhs + 1e-9).all()
+
+
+@given(point_sets())
+@settings(max_examples=15, deadline=None)
+def test_core_distance_monotone(x):
+    kmax = min(10, len(x))
+    cd = oref.core_distances(x, kmax)
+    assert (np.diff(cd, axis=1) >= -1e-12).all()
+
+
+def test_exact_rng_matches_naive_oracle(blobs):
+    x, _ = blobs
+    kmax = 12
+    knn_d2, knn_idx = kernels.ops.knn(jnp.asarray(x), kmax - 1)
+    g = rng_mod.build_rng_graph(jnp.asarray(x), knn_d2, knn_idx, variant="rng")
+    cd = oref.core_distances(x.astype(np.float64), kmax)
+    adj = oref.rng_naive(oref.mrd_matrix(x.astype(np.float64), kmax, cd))
+    ref_set = set(zip(*map(lambda v: v.tolist(), np.nonzero(np.triu(adj)))))
+    ours = set(map(tuple, g.edges.tolist()))
+    assert ref_set - ours == set(), f"missing {len(ref_set - ours)} RNG edges"
+    # numerically-boundary extra edges are allowed but must be rare
+    assert len(ours - ref_set) <= max(2, len(ref_set) // 100)
+
+
+def test_theorem2_rng_nesting(blobs):
+    x, _ = blobs
+    x64 = x.astype(np.float64)[:120]
+    kmax = 10
+    cd = oref.core_distances(x64, kmax)
+    prev = None
+    for i in (2, 5, kmax):
+        adj = oref.rng_naive(oref.mrd_matrix(x64, i, cd))
+        edges = set(zip(*map(lambda v: v.tolist(), np.nonzero(np.triu(adj)))))
+        if prev is not None:
+            assert prev <= edges, f"RNG^{i} does not contain smaller-mpts RNG"
+        prev = edges
+
+
+@pytest.mark.parametrize("variant", ["rng_ss", "rng_star", "rng"])
+def test_corollary1_mst_equivalence(blobs, variant):
+    """MSTs from the reweighted RNG == MSTs of the complete mrd graph."""
+    x, _ = blobs
+    kmax = 12
+    res = multi.multi_hdbscan(x, kmax, variant=variant)
+    cd = oref.core_distances(x.astype(np.float64), kmax)
+    for h in res.hierarchies[::4]:
+        want = oref.mst_weights(oref.mrd_matrix(x.astype(np.float64), h.mpts, cd))
+        np.testing.assert_allclose(np.sort(h.mst_w), want, rtol=1e-5, atol=1e-6)
+
+
+def test_variant_containment(blobs):
+    x, _ = blobs
+    kmax = 12
+    knn_d2, knn_idx = kernels.ops.knn(jnp.asarray(x), kmax - 1)
+    sets = {}
+    for v in ("rng_ss", "rng_star", "rng"):
+        g = rng_mod.build_rng_graph(jnp.asarray(x), knn_d2, knn_idx, variant=v)
+        sets[v] = set(map(tuple, g.edges.tolist()))
+    assert sets["rng"] <= sets["rng_star"] <= sets["rng_ss"]
+
+
+def test_reweight_all_mpts_matches_definition(gauss16d):
+    x = jnp.asarray(gauss16d[:200])
+    kmax = 8
+    knn_d2, knn_idx = kernels.ops.knn(x, kmax - 1)
+    cd2 = mrd_mod.core_distances2(knn_d2)
+    ea = jnp.asarray([0, 5, 10], jnp.int32)
+    eb = jnp.asarray([1, 6, 11], jnp.int32)
+    d2e = mrd_mod.edge_d2(x, ea, eb)
+    w = np.asarray(mrd_mod.reweight_all_mpts(d2e, cd2, ea, eb))
+    for j in range(1, kmax + 1):
+        exp = np.maximum(
+            np.maximum(np.asarray(cd2)[np.asarray(ea), j - 1],
+                       np.asarray(cd2)[np.asarray(eb), j - 1]),
+            np.asarray(d2e),
+        )
+        np.testing.assert_allclose(w[j - 1], exp, rtol=1e-6)
