@@ -13,6 +13,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
@@ -39,6 +40,12 @@ def main() -> None:
     for r in paper_sweeps.kmax_sweep(kmaxes=(4, 16, 64), n=2000, d=8):
         name = f"tab2_kmax/k={r['kmax']}/{r['method']}"
         print(f"{name},{r['wall_s'] * 1e6:.0f},ratio_vs_one={r['ratio_vs_one']}")
+        rows.append(r)
+
+    # extraction phase: batched device linkage vs legacy per-edge Python loop
+    for r in paper_sweeps.extraction_sweep(n=2000, d=8, kmax=16):
+        name = f"extract/k={r['kmax']}/{r['method']}"
+        print(f"{name},{r['wall_s'] * 1e6:.0f},speedup_vs_loop={r['speedup_vs_loop']}x")
         rows.append(r)
 
     # roofline rows from dry-run artifacts (if the matrix has been run)

@@ -1,18 +1,20 @@
 """Quickstart: one hundred hierarchies for the cost of ~two (paper headline).
 
-Builds a clustered dataset, runs the multi-mpts engine once, compares against
-the optimized rerun baseline, and verifies the hierarchies agree.
+Builds a clustered dataset, fits the `MultiHDBSCAN` estimator once, compares
+against the optimized rerun baseline, and verifies the hierarchies agree.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
 import sys
 import time
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
 import numpy as np
 
+from repro.api import MultiHDBSCAN
 from repro.core import multi
 
 
@@ -26,31 +28,31 @@ def main():
     print(f"dataset: n={len(x)}, d={x.shape[1]}, mpts range [2, {kmax}]")
 
     t0 = time.monotonic()
-    res = multi.multi_hdbscan(x, kmax, variant="rng_star")
+    est = MultiHDBSCAN(kmax=kmax).fit(x)
+    profile = est.mpts_profile()  # forces extraction of the whole range
     t_multi = time.monotonic() - t0
-    print(f"\nRNG*-HDBSCAN*: {len(res.hierarchies)} hierarchies in {t_multi:.2f}s")
-    print(f"  graph edges: {len(res.graph.edges):,} "
+    print(f"\nMultiHDBSCAN: {len(profile)} hierarchies in {t_multi:.2f}s")
+    print(f"  graph edges: {est.n_graph_edges_:,} "
           f"(complete graph: {len(x)*(len(x)-1)//2:,})")
-    print("  timings:", {k: round(v, 2) for k, v in res.timings.items()})
+    print("  fit timings:", {k: round(v, 2) for k, v in est.timings_.items()})
 
     t0 = time.monotonic()
-    base, tb = multi.hdbscan_baseline(x, [kmax])
+    base, _ = multi.hdbscan_baseline(x, [kmax])
     t_one = time.monotonic() - t0
     print(f"\nbaseline, ONE hierarchy (mpts={kmax}): {t_one:.2f}s")
-    print(f"=> {len(res.hierarchies)} hierarchies for "
+    print(f"=> {len(profile)} hierarchies for "
           f"{t_multi / t_one:.1f}x the cost of one (paper: ~2x at kmax=128)")
 
-    h = base[0]
-    ours = [hh for hh in res.hierarchies if hh.mpts == kmax][0]
+    _, _, w = est.mst_for(kmax)
     np.testing.assert_allclose(
-        np.sort(ours.mst_w), np.sort(h.mst_w), rtol=1e-5, atol=1e-6
+        np.sort(w), np.sort(base[0].mst_w), rtol=1e-5, atol=1e-6
     )
     print("\nMST weight multisets agree with the baseline — hierarchies are exact.")
 
     print("\nclusters per mpts (sampled):")
-    for hh in res.hierarchies[:: max(1, len(res.hierarchies) // 8)]:
-        noise = int((hh.labels == -1).sum())
-        print(f"  mpts={hh.mpts:3d}: {hh.n_clusters:3d} clusters, {noise:4d} noise pts")
+    for row in profile[:: max(1, len(profile) // 8)]:
+        print(f"  mpts={row['mpts']:3d}: {row['n_clusters']:3d} clusters, "
+              f"{row['n_noise']:4d} noise pts")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,14 @@
 """repro: multi-density clustering hierarchies (RNG-HDBSCAN*) at pod scale."""
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+__all__ = ["MultiHDBSCAN", "__version__"]
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays cheap; `repro.MultiHDBSCAN` pulls in jax
+    if name == "MultiHDBSCAN":
+        from .api import MultiHDBSCAN
+
+        return MultiHDBSCAN
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,13 @@
+"""Public estimator API for the multi-density clustering engine.
+
+    from repro.api import MultiHDBSCAN
+
+    est = MultiHDBSCAN(kmax=32).fit(x)
+    labels = est.labels_for(mpts=8)        # lazily extracted, cached
+    tree = est.hierarchy_for(mpts=8)       # condensed tree + stabilities
+    profile = est.mpts_profile()           # the whole density range at a glance
+"""
+
+from .estimator import MultiHDBSCAN
+
+__all__ = ["MultiHDBSCAN"]

@@ -1,0 +1,209 @@
+"""`MultiHDBSCAN`: sklearn-style front door for the multi-density engine.
+
+One ``fit`` buys the whole mpts range (the paper's "hundred hierarchies for
+the cost of ~2 HDBSCAN* runs"): a single kNN pass, a single RNG^kmax, one
+batched Borůvka over every reweighting.  Everything *per-mpts* — the
+dendrogram condensation, cluster selection, labels — is extracted lazily and
+cached: the first extraction request runs the batched device single-linkage
+for the full range (core.linkage), after which each ``labels_for(mpts)`` is
+a cheap vectorized host pass.
+
+Estimator surface (in the spirit of McInnes & Healy's hdbscan API, with
+Malzer & Baum-style selection options):
+
+  fit(X) / fit_predict(X, mpts=...)
+  labels_for(mpts) / hierarchy_for(mpts) / probabilities_for(mpts)
+  mpts_profile()  — the paper's "which density level reveals which structure"
+                    exploration as one query
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..core import multi
+
+
+class MultiHDBSCAN:
+    """All HDBSCAN* hierarchies for mpts in [kmin, kmax] from one fit.
+
+    Parameters
+    ----------
+    kmax : int
+        Largest mpts (neighbourhood size) in the range; one (kmax-1)-NN pass
+        and one RNG^kmax serve the whole range.
+    kmin : int
+        Smallest mpts in the range (default 2).
+    mpts_values : sequence of int, optional
+        Explicit subset of the range to compute MSTs for (default: all of
+        [kmin, kmax]).
+    min_cluster_size : int, optional
+        Condensation threshold; default per-mpts ``max(2, mpts)``.
+    cluster_selection_method : {"eom", "leaf"}
+        Excess-of-mass (HDBSCAN* default) or condensed-tree leaves.
+    allow_single_cluster : bool
+        Permit the root as a selected cluster.
+    variant : {"rng_ss", "rng_star", "rng"}
+        RNG^kmax graph variant (paper §IV); rng_star is the default
+        speed/size tradeoff.
+    backend : str, optional
+        Kernel backend ("pallas", "pallas_interpret", "jnp", "ref");
+        default auto-selects per platform.
+    """
+
+    def __init__(
+        self,
+        kmax: int = 16,
+        *,
+        kmin: int = 2,
+        mpts_values: Sequence[int] | None = None,
+        min_cluster_size: int | None = None,
+        cluster_selection_method: str = "eom",
+        allow_single_cluster: bool = False,
+        variant: str = "rng_star",
+        backend: str | None = None,
+    ):
+        if cluster_selection_method not in ("eom", "leaf"):
+            raise ValueError(
+                "cluster_selection_method must be 'eom' or 'leaf'; "
+                f"got {cluster_selection_method!r}"
+            )
+        if kmax < 2:
+            raise ValueError(f"kmax must be >= 2; got {kmax}")
+        multi._validate_min_cluster_size(min_cluster_size)
+        if not 2 <= kmin <= kmax:
+            raise ValueError(f"need 2 <= kmin <= kmax; got kmin={kmin}, kmax={kmax}")
+        self.kmax = kmax
+        self.kmin = kmin
+        self.mpts_values = list(mpts_values) if mpts_values is not None else None
+        self.min_cluster_size = min_cluster_size
+        self.cluster_selection_method = cluster_selection_method
+        self.allow_single_cluster = allow_single_cluster
+        self.variant = variant
+        self.backend = backend
+
+        self._msts: multi.MultiMSTResult | None = None
+        self._linkage: multi.LinkageRange | None = None
+        self._hierarchy_cache: dict[int, multi.HierarchyResult] = {}
+
+    # -- fitting -----------------------------------------------------------
+
+    def fit(self, X) -> "MultiHDBSCAN":
+        """Compute the shared graph and every per-mpts MST (no extraction)."""
+        X = np.asarray(X)
+        if X.ndim != 2:
+            raise ValueError(f"X must be 2-d (n_samples, n_features); got {X.shape}")
+        if X.shape[0] <= self.kmax:
+            raise ValueError(
+                f"n_samples must exceed kmax; got n={X.shape[0]}, kmax={self.kmax}"
+            )
+        self._msts = multi.fit_msts(
+            X,
+            self.kmax,
+            kmin=self.kmin,
+            variant=self.variant,
+            backend=self.backend,
+            mpts_values=self.mpts_values,
+        )
+        self._linkage = None
+        self._hierarchy_cache = {}
+        self.n_features_in_ = X.shape[1]
+        self.n_samples_ = X.shape[0]
+        self.mpts_values_ = list(self._msts.mpts_values)
+        self.timings_ = dict(self._msts.timings)
+        return self
+
+    def fit_predict(self, X, mpts: int | None = None) -> np.ndarray:
+        """fit + labels at one density level (default: the largest, kmax)."""
+        self.fit(X)
+        labels = self.labels_for(mpts if mpts is not None else self.mpts_values_[-1])
+        self.labels_ = labels
+        return labels
+
+    # -- lazy batched extraction ------------------------------------------
+
+    def _check_fitted(self) -> multi.MultiMSTResult:
+        if self._msts is None:
+            raise RuntimeError("MultiHDBSCAN instance is not fitted yet; call fit(X)")
+        return self._msts
+
+    def _ensure_linkage(self) -> multi.LinkageRange:
+        """All dendrograms for the range in ONE device program, on first need."""
+        msts = self._check_fitted()
+        if self._linkage is None:
+            self._linkage = multi.linkage_range(msts)
+        return self._linkage
+
+    def hierarchy_for(self, mpts: int) -> multi.HierarchyResult:
+        """Condensed tree / stabilities / labels at one density level (cached)."""
+        msts = self._check_fitted()
+        if mpts not in self._hierarchy_cache:
+            self._hierarchy_cache[mpts] = multi.extract_one_from_linkage(
+                msts,
+                self._ensure_linkage(),
+                msts.row_of(mpts),
+                min_cluster_size=self.min_cluster_size,
+                allow_single_cluster=self.allow_single_cluster,
+                cluster_selection_method=self.cluster_selection_method,
+            )
+        return self._hierarchy_cache[mpts]
+
+    def labels_for(self, mpts: int) -> np.ndarray:
+        """Cluster labels (-1 = noise) at one density level (cached)."""
+        return self.hierarchy_for(mpts).labels
+
+    def mst_for(self, mpts: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(ea, eb, w) MST edges under mutual reachability at this mpts."""
+        msts = self._check_fitted()
+        row = msts.row_of(mpts)
+        return msts.mst_ea[row], msts.mst_eb[row], msts.mst_w[row]
+
+    @property
+    def graph_(self):
+        """The fitted RNG^kmax (RngGraph: edges, d2, variant, stats)."""
+        return self._check_fitted().graph
+
+    @property
+    def n_graph_edges_(self) -> int:
+        """Edge count of the shared RNG^kmax (vs n(n-1)/2 for the baseline)."""
+        return len(self.graph_.edges)
+
+    # -- range-level queries ----------------------------------------------
+
+    def mpts_profile(self) -> list[dict]:
+        """Stability-across-mpts summary: one row per density level.
+
+        Each row reports how the clustering looks at that mpts — the paper's
+        multi-density exploration ("which density level reveals which
+        cluster") as a single query.  ``total_stability`` sums selected-
+        cluster excess-of-mass; comparisons across mpts are indicative (the
+        lambda scale shifts with density), so treat it as a ranking aid, not
+        an absolute score.
+        """
+        msts = self._check_fitted()
+        rows = []
+        for mpts in msts.mpts_values:
+            h = self.hierarchy_for(mpts)
+            sizes = np.bincount(h.labels[h.labels >= 0], minlength=h.n_clusters)
+            selected_stab = sorted(
+                (h.stability.get(c, 0.0) for c in h.selected), reverse=True
+            )
+            rows.append({
+                "mpts": mpts,
+                "n_clusters": h.n_clusters,
+                "n_noise": int((h.labels == -1).sum()),
+                "cluster_sizes": sizes.tolist(),
+                "max_stability": float(selected_stab[0]) if selected_stab else 0.0,
+                "total_stability": float(sum(selected_stab)),
+            })
+        return rows
+
+    def __repr__(self) -> str:
+        fitted = "" if self._msts is None else f", fitted n={self.n_samples_}"
+        return (
+            f"MultiHDBSCAN(kmax={self.kmax}, kmin={self.kmin}, "
+            f"variant={self.variant!r}, "
+            f"cluster_selection_method={self.cluster_selection_method!r}{fitted})"
+        )

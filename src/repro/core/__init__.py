@@ -3,21 +3,37 @@
 Public API:
   multi_hdbscan       — all hierarchies for mpts in [kmin, kmax] via RNG^kmax
   hdbscan_baseline    — optimized re-run baseline (shared kNN + dense MST)
+  fit_msts            — stage 1/2 only: shared graph + all MSTs, no extraction
+  extract_hierarchies — batched on-demand extraction from a MultiMSTResult
   build_rng_graph     — the single RNG^kmax (variants rng_ss / rng_star / rng)
   boruvka_mst(_range) — batched edge-list MSTs
+  linkage             — batched device single-linkage (extraction stage 1)
   hierarchy, dbcv     — extraction & validation submodules
 """
 
-from . import boruvka, dbcv, hierarchy, mrd, rng, sbcn, wspd
+from . import boruvka, dbcv, hierarchy, linkage, mrd, rng, sbcn, wspd
 from .boruvka import boruvka_mst, boruvka_mst_range, prim_dense_mst
+from .linkage import single_linkage_batch
 from .mrd import core_distances2, edge_mrd2, mrd2_from_parts, reweight_all_mpts
-from .multi import HierarchyResult, MultiDensityResult, hdbscan_baseline, multi_hdbscan
+from .multi import (
+    HierarchyResult,
+    LinkageRange,
+    MultiDensityResult,
+    MultiMSTResult,
+    extract_hierarchies,
+    fit_msts,
+    hdbscan_baseline,
+    linkage_range,
+    multi_hdbscan,
+)
 from .rng import RngGraph, build_rng_graph
 
 __all__ = [
-    "boruvka", "dbcv", "hierarchy", "mrd", "rng", "sbcn", "wspd",
-    "boruvka_mst", "boruvka_mst_range", "prim_dense_mst",
+    "boruvka", "dbcv", "hierarchy", "linkage", "mrd", "rng", "sbcn", "wspd",
+    "boruvka_mst", "boruvka_mst_range", "prim_dense_mst", "single_linkage_batch",
     "core_distances2", "edge_mrd2", "mrd2_from_parts", "reweight_all_mpts",
-    "HierarchyResult", "MultiDensityResult", "hdbscan_baseline", "multi_hdbscan",
+    "HierarchyResult", "LinkageRange", "MultiDensityResult", "MultiMSTResult",
+    "extract_hierarchies", "fit_msts", "hdbscan_baseline", "linkage_range",
+    "multi_hdbscan",
     "RngGraph", "build_rng_graph",
 ]

@@ -1,0 +1,136 @@
+"""Batched single-linkage dendrograms on device (extraction, stage 1).
+
+The seed implementation built each dendrogram with a per-edge *Python*
+union-find loop (core.hierarchy.single_linkage), run once per mpts value —
+interpreter-bound scalar work repeated R times.  Here the whole mpts range
+is ONE XLA program: a ``fori_loop`` over the n-1 weight-sorted edges with a
+path-halving union-find, vmapped across the R hierarchies.  The loop is
+compiled once and executes with no Python in it; the batch dimension keeps
+the device busy while each lane runs its (inherently sequential) merges.
+
+Output follows the scipy linkage convention used by ``core.hierarchy``:
+cluster ids 0..n-1 are points, ``n + i`` is the cluster born at merge row
+``i``; rows are ordered by ascending merge height (stable in the input edge
+order, matching the host reference's ``np.lexsort((arange, w))``).
+
+Precondition: every row of ``(ea, eb)`` is a spanning tree of the n points
+(exactly n-1 edges, no duplicates/cycles), so every edge merges two distinct
+components and no "skip" branch is needed.  ``core.multi`` feeds exact MSTs,
+which satisfy this by construction; ``validate_spanning`` is a cheap host
+check for external callers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _find(parent, v):
+    """Union-find root of v: read-only walk (scalar loop carry).
+
+    No path compression: compression would mutate the (n,) parent array
+    inside the while body, and under vmap the loop's lane masking turns each
+    iteration into a full-array select — O(n) copies per find.  Union by
+    size (see `step` below) bounds the walk at log2(n) instead.
+    """
+
+    def cond(u):
+        return parent[u] != u
+
+    return jax.lax.while_loop(cond, lambda u: parent[u], v)
+
+
+def _single_linkage_one(ea, eb, w, n: int):
+    """One spanning tree's (n-1) edges -> merge rows (left, right, height, size)."""
+    order = jnp.argsort(w)  # jnp.argsort is stable: ties keep input edge order
+    ea_s = ea[order].astype(jnp.int32)
+    eb_s = eb[order].astype(jnp.int32)
+    w_s = w[order]
+    n_merges = ea.shape[0]
+
+    def step(i, state):
+        parent, label, csize, left, right, size = state
+        ra = _find(parent, ea_s[i])
+        rb = _find(parent, eb_s[i])
+        sz = csize[ra] + csize[rb]
+        left = left.at[i].set(label[ra])
+        right = right.at[i].set(label[rb])
+        size = size.at[i].set(sz)
+        # union by size: tree depth stays <= log2(n), keeping finds cheap
+        winner = jnp.where(csize[ra] >= csize[rb], ra, rb)
+        loser = jnp.where(csize[ra] >= csize[rb], rb, ra)
+        parent = parent.at[loser].set(winner)
+        label = label.at[winner].set(n + i)
+        csize = csize.at[winner].set(sz)
+        return parent, label, csize, left, right, size
+
+    state = (
+        jnp.arange(n, dtype=jnp.int32),       # union-find parent
+        jnp.arange(n, dtype=jnp.int32),       # cluster label of each root
+        jnp.ones((n,), jnp.int32),            # component size at each root
+        jnp.zeros((n_merges,), jnp.int32),
+        jnp.zeros((n_merges,), jnp.int32),
+        jnp.zeros((n_merges,), jnp.int32),
+    )
+    _, _, _, left, right, size = jax.lax.fori_loop(0, n_merges, step, state)
+    return left, right, w_s, size
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def single_linkage_batch(ea, eb, w, *, n: int):
+    """Dendrograms for a batch of spanning trees in one device program.
+
+    Args:
+      ea, eb: (R, n-1) integer endpoints; each row a spanning tree over n points.
+      w: (R, n-1) non-negative merge weights (real, NOT squared, distances).
+      n: number of points (static).
+    Returns:
+      (left, right, height, size), each (R, n-1): scipy-convention merge rows
+      sorted by ascending height.
+    """
+    one = functools.partial(_single_linkage_one, n=n)
+    return jax.vmap(one)(jnp.asarray(ea), jnp.asarray(eb), jnp.asarray(w))
+
+
+def linkage_to_Z(left, right, height, size) -> np.ndarray:
+    """Pack one row's merge arrays into a scipy-style (n-1, 4) float64 Z."""
+    return np.stack(
+        [
+            np.asarray(left, np.float64),
+            np.asarray(right, np.float64),
+            np.asarray(height, np.float64),
+            np.asarray(size, np.float64),
+        ],
+        axis=-1,
+    )
+
+
+def validate_spanning(ea: np.ndarray, eb: np.ndarray, n: int) -> None:
+    """Raise ValueError unless (ea, eb) is a spanning tree of n vertices."""
+    ea = np.asarray(ea)
+    eb = np.asarray(eb)
+    if ea.shape != (n - 1,) or eb.shape != (n - 1,):
+        raise ValueError(f"expected {n - 1} edges, got {ea.shape} / {eb.shape}")
+    # n-1 edges span n vertices iff the edge set is acyclic & connected; a
+    # union-find count suffices and this is a host-side debug path only.
+    parent = np.arange(n)
+
+    def find(v):
+        while parent[v] != v:
+            parent[v] = parent[parent[v]]
+            v = parent[v]
+        return v
+
+    merges = 0
+    for a, b in zip(ea, eb):
+        ra, rb = find(a), find(b)
+        if ra == rb:
+            raise ValueError("edge list contains a cycle")
+        parent[ra] = rb
+        merges += 1
+    if merges != n - 1:
+        raise ValueError("edge list does not span")

@@ -1,16 +1,28 @@
 """End-to-end driver: "over one hundred hierarchies for the cost of two".
 
-``multi_hdbscan``  — the paper's method: one (kmax-1)-NN pass, one RNG^kmax,
-then per-mpts {reweight -> MST -> hierarchy} with the MST range batched into
-a single device program.
+Staged pipeline (each stage reusable on its own; ``repro.api.MultiHDBSCAN``
+is the front door that composes them lazily):
+
+  ``fit_msts``          — one (kmax-1)-NN pass, one RNG^kmax, reweight for the
+                          whole mpts range, batched Borůvka: all R MSTs as
+                          (R, n-1) edge arrays.  Device-heavy, done once.
+  ``linkage_range``     — stage 1 of extraction: all R single-linkage
+                          dendrograms in ONE vmapped device program
+                          (core.linkage), no per-edge Python loop.
+  ``extract_hierarchies`` / ``extract_one_from_linkage``
+                        — stage 2: vectorized condense/stability/labels
+                          (core.hierarchy fast path) per requested mpts, so
+                          hierarchies materialize on demand.
+
+``multi_hdbscan``  — the paper's method end-to-end (eager extraction of the
+whole range), kept as the one-call entry point for scripts and tests.
 
 ``hdbscan_baseline`` — the paper's *optimized* comparison baseline: the same
 single kNN pass (core distances shared across the range), then an O(n^2)
 complete-graph MST per mpts (dense Prim, nothing materialized).
 
-Both return per-mpts hierarchies/labels through the same host-side extraction
-(core.hierarchy), so benchmark ratios isolate exactly the graph/MST work the
-paper optimizes.
+Both return per-mpts hierarchies/labels through the same batched extraction,
+so benchmark ratios isolate exactly the graph/MST work the paper optimizes.
 """
 
 from __future__ import annotations
@@ -19,12 +31,12 @@ import dataclasses
 import time
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .. import kernels
-from . import boruvka, hierarchy
+from . import hierarchy, linkage
+from . import boruvka
 from . import mrd as mrd_mod
 from .rng import RngGraph, build_rng_graph
 
@@ -35,10 +47,54 @@ class HierarchyResult:
     labels: np.ndarray
     n_clusters: int
     condensed: hierarchy.CondensedTree
-    stability: dict[int, float]
+    stability: dict[int, float]  # every condensed cluster, selected or not
     mst_ea: np.ndarray
     mst_eb: np.ndarray
     mst_w: np.ndarray  # real (non-squared) mrd weights
+    selected: list[int] = dataclasses.field(default_factory=list)  # chosen cluster ids
+
+
+def _validate_min_cluster_size(min_cluster_size: int | None) -> None:
+    if min_cluster_size is not None and min_cluster_size < 2:
+        raise ValueError(
+            f"min_cluster_size must be >= 2 (or None for the per-mpts "
+            f"default max(2, mpts)); got {min_cluster_size}"
+        )
+
+
+@dataclasses.dataclass
+class MultiMSTResult:
+    """Everything shared across the mpts range, before any extraction."""
+
+    n: int
+    kmax: int
+    mpts_values: list[int]
+    graph: RngGraph | None
+    knn_d2: np.ndarray
+    knn_idx: np.ndarray
+    cd2: np.ndarray
+    mst_ea: np.ndarray  # (R, n-1) int32: MST edges per mpts row
+    mst_eb: np.ndarray  # (R, n-1) int32
+    mst_w: np.ndarray   # (R, n-1) float32, real (non-squared) mrd weights
+    timings: dict[str, float]
+
+    def row_of(self, mpts: int) -> int:
+        try:
+            return self.mpts_values.index(mpts)
+        except ValueError:
+            raise KeyError(
+                f"mpts={mpts} not in computed range {self.mpts_values}"
+            ) from None
+
+
+@dataclasses.dataclass
+class LinkageRange:
+    """Stage-1 extraction output: all R dendrograms, scipy convention."""
+
+    left: np.ndarray    # (R, n-1) int32
+    right: np.ndarray   # (R, n-1) int32
+    height: np.ndarray  # (R, n-1) float32, ascending per row
+    size: np.ndarray    # (R, n-1) int32
 
 
 @dataclasses.dataclass
@@ -54,49 +110,23 @@ class MultiDensityResult:
     timings: dict[str, float]
 
 
-def _extract_one(
-    mpts: int,
-    ea: np.ndarray,
-    eb: np.ndarray,
-    w: np.ndarray,
-    n: int,
-    min_cluster_size: int | None,
-    allow_single_cluster: bool,
-) -> HierarchyResult:
-    mcs = min_cluster_size if min_cluster_size is not None else max(2, mpts)
-    labels, tree, stab = hierarchy.hdbscan_labels(
-        ea, eb, w, n, mcs, allow_single_cluster=allow_single_cluster
-    )
-    return HierarchyResult(
-        mpts=mpts,
-        labels=labels,
-        n_clusters=int(labels.max()) + 1,
-        condensed=tree,
-        stability=stab,
-        mst_ea=ea,
-        mst_eb=eb,
-        mst_w=w,
-    )
-
-
-def multi_hdbscan(
+def fit_msts(
     x,
     kmax: int,
     *,
     kmin: int = 2,
     variant: str = "rng_star",
-    min_cluster_size: int | None = None,
-    allow_single_cluster: bool = False,
     backend: str | None = None,
-    compute_hierarchies: bool = True,
     mpts_values: Sequence[int] | None = None,
-) -> MultiDensityResult:
-    """All HDBSCAN* hierarchies for mpts in [kmin, kmax] via one RNG^kmax."""
+) -> MultiMSTResult:
+    """kNN -> RNG^kmax -> reweight-all-mpts -> batched Borůvka, no extraction."""
     x = jnp.asarray(x)
     n = x.shape[0]
     if kmax < 2 or kmax > n:
         raise ValueError(f"kmax must be in [2, n]; got {kmax} (n={n})")
     mpts_list = list(mpts_values) if mpts_values is not None else list(range(kmin, kmax + 1))
+    if any(m < 1 or m > kmax for m in mpts_list):
+        raise ValueError(f"mpts values must lie in [1, kmax]; got {mpts_list}")
     timings: dict[str, float] = {}
 
     t0 = time.monotonic()
@@ -113,35 +143,28 @@ def multi_hdbscan(
     eb = jnp.asarray(graph.edges[:, 1], jnp.int32)
 
     t0 = time.monotonic()
-    cd2_dev = jnp.asarray(cd2)
-    w_range = mrd_mod.reweight_all_mpts(jnp.asarray(graph.d2), cd2_dev, ea, eb)
+    w_range = mrd_mod.reweight_all_mpts(jnp.asarray(graph.d2), jnp.asarray(cd2), ea, eb)
     w_sel = w_range[jnp.asarray([m - 1 for m in mpts_list])]
     in_mst = boruvka.boruvka_mst_range(ea, eb, w_sel, n=n)
     in_mst.block_until_ready()
+
+    # compact each row's boolean mask to (n-1) edge indices in one pass
+    in_mst_np = np.asarray(in_mst)
+    counts = in_mst_np.sum(axis=1)
+    if not np.all(counts == n - 1):
+        bad = [mpts_list[i] for i in np.flatnonzero(counts != n - 1)]
+        raise RuntimeError(
+            f"MST incomplete for mpts={bad}: graph variant {variant!r} is "
+            f"disconnected at those densities"
+        )
+    sel = np.nonzero(in_mst_np)[1].reshape(len(mpts_list), n - 1)
+    rows = np.arange(len(mpts_list))[:, None]
+    mst_ea = graph.edges[sel, 0].astype(np.int32)
+    mst_eb = graph.edges[sel, 1].astype(np.int32)
+    mst_w = np.sqrt(np.asarray(w_sel)[rows, sel])
     timings["mst_range"] = time.monotonic() - t0
 
-    hierarchies: list[HierarchyResult] = []
-    t0 = time.monotonic()
-    in_mst_np = np.asarray(in_mst)
-    w_sel_np = np.asarray(w_sel)
-    if compute_hierarchies:
-        for row, mpts in enumerate(mpts_list):
-            sel = in_mst_np[row]
-            hierarchies.append(
-                _extract_one(
-                    mpts,
-                    graph.edges[sel, 0],
-                    graph.edges[sel, 1],
-                    np.sqrt(w_sel_np[row][sel]),
-                    n,
-                    min_cluster_size,
-                    allow_single_cluster,
-                )
-            )
-    timings["hierarchy"] = time.monotonic() - t0
-    timings["total"] = sum(timings.values())
-
-    return MultiDensityResult(
+    return MultiMSTResult(
         n=n,
         kmax=kmax,
         mpts_values=mpts_list,
@@ -149,6 +172,138 @@ def multi_hdbscan(
         knn_d2=np.asarray(knn_d2),
         knn_idx=np.asarray(knn_idx),
         cd2=cd2,
+        mst_ea=mst_ea,
+        mst_eb=mst_eb,
+        mst_w=mst_w,
+        timings=timings,
+    )
+
+
+def linkage_range(msts: MultiMSTResult) -> LinkageRange:
+    """All of the range's dendrograms in one batched device program.
+
+    Row i of the result corresponds to ``msts.mpts_values[i]``.
+    """
+    left, right, height, size = linkage.single_linkage_batch(
+        msts.mst_ea, msts.mst_eb, msts.mst_w, n=msts.n
+    )
+    return LinkageRange(
+        left=np.asarray(left),
+        right=np.asarray(right),
+        height=np.asarray(height),
+        size=np.asarray(size),
+    )
+
+
+def extract_one_from_linkage(
+    msts: MultiMSTResult,
+    lk: LinkageRange,
+    row: int,
+    *,
+    min_cluster_size: int | None = None,
+    allow_single_cluster: bool = False,
+    cluster_selection_method: str = "eom",
+) -> HierarchyResult:
+    """Vectorized condense/select/label for one mpts row of a LinkageRange."""
+    mpts = msts.mpts_values[row]
+    mcs = min_cluster_size if min_cluster_size is not None else max(2, mpts)
+    Z = linkage.linkage_to_Z(lk.left[row], lk.right[row], lk.height[row], lk.size[row])
+    tree = hierarchy.condense_tree_fast(Z, msts.n, mcs)
+    stab = hierarchy.compute_stability_fast(tree)
+    selected = hierarchy.extract_clusters(
+        tree,
+        stab,
+        allow_single_cluster=allow_single_cluster,
+        cluster_selection_method=cluster_selection_method,
+    )
+    labels, _ = hierarchy.labels_for_fast(tree, selected)
+    return HierarchyResult(
+        mpts=mpts,
+        labels=labels,
+        n_clusters=int(labels.max()) + 1,
+        condensed=tree,
+        stability=stab,
+        mst_ea=msts.mst_ea[row].astype(np.int64),
+        mst_eb=msts.mst_eb[row].astype(np.int64),
+        mst_w=msts.mst_w[row],
+        selected=selected,
+    )
+
+
+def extract_hierarchies(
+    msts: MultiMSTResult,
+    *,
+    lk: LinkageRange | None = None,
+    min_cluster_size: int | None = None,
+    allow_single_cluster: bool = False,
+    cluster_selection_method: str = "eom",
+) -> tuple[list[HierarchyResult], dict[str, float]]:
+    """Batched extraction of the whole range; returns (hierarchies, timings)."""
+    timings: dict[str, float] = {}
+    t0 = time.monotonic()
+    if lk is None:
+        lk = linkage_range(msts)
+    timings["hierarchy_linkage"] = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    out = [
+        extract_one_from_linkage(
+            msts,
+            lk,
+            row,
+            min_cluster_size=min_cluster_size,
+            allow_single_cluster=allow_single_cluster,
+            cluster_selection_method=cluster_selection_method,
+        )
+        for row in range(len(msts.mpts_values))
+    ]
+    timings["hierarchy_condense"] = time.monotonic() - t0
+    timings["hierarchy"] = timings["hierarchy_linkage"] + timings["hierarchy_condense"]
+    return out, timings
+
+
+def multi_hdbscan(
+    x,
+    kmax: int,
+    *,
+    kmin: int = 2,
+    variant: str = "rng_star",
+    min_cluster_size: int | None = None,
+    allow_single_cluster: bool = False,
+    cluster_selection_method: str = "eom",
+    backend: str | None = None,
+    compute_hierarchies: bool = True,
+    mpts_values: Sequence[int] | None = None,
+) -> MultiDensityResult:
+    """All HDBSCAN* hierarchies for mpts in [kmin, kmax] via one RNG^kmax."""
+    _validate_min_cluster_size(min_cluster_size)
+    msts = fit_msts(
+        x, kmax, kmin=kmin, variant=variant, backend=backend, mpts_values=mpts_values
+    )
+    timings = dict(msts.timings)
+    hierarchies: list[HierarchyResult] = []
+    if compute_hierarchies:
+        hierarchies, t_extract = extract_hierarchies(
+            msts,
+            min_cluster_size=min_cluster_size,
+            allow_single_cluster=allow_single_cluster,
+            cluster_selection_method=cluster_selection_method,
+        )
+        timings.update(t_extract)
+    else:
+        timings["hierarchy"] = 0.0
+    timings["total"] = (
+        timings["knn"] + timings["rng_build"] + timings["mst_range"] + timings["hierarchy"]
+    )
+
+    return MultiDensityResult(
+        n=msts.n,
+        kmax=kmax,
+        mpts_values=msts.mpts_values,
+        graph=msts.graph,
+        knn_d2=msts.knn_d2,
+        knn_idx=msts.knn_idx,
+        cd2=msts.cd2,
         hierarchies=hierarchies,
         timings=timings,
     )
@@ -161,13 +316,16 @@ def hdbscan_baseline(
     kmax: int | None = None,
     min_cluster_size: int | None = None,
     allow_single_cluster: bool = False,
+    cluster_selection_method: str = "eom",
     backend: str | None = None,
     compute_hierarchies: bool = True,
 ) -> tuple[list[HierarchyResult], dict[str, float]]:
     """Paper's baseline: shared kNN pass + dense complete-graph MST per mpts."""
+    _validate_min_cluster_size(min_cluster_size)
     x = jnp.asarray(x)
     n = x.shape[0]
-    kmax = kmax or max(mpts_values)
+    mpts_list = list(mpts_values)
+    kmax = kmax or max(mpts_list)
     timings: dict[str, float] = {}
 
     t0 = time.monotonic()
@@ -176,30 +334,41 @@ def hdbscan_baseline(
     cd2.block_until_ready()
     timings["knn"] = time.monotonic() - t0
 
-    results = []
     t_mst = 0.0
-    t_h = 0.0
-    for mpts in mpts_values:
+    eb = np.arange(1, n, dtype=np.int32)
+    mst_ea = np.zeros((len(mpts_list), n - 1), np.int32)
+    mst_w = np.zeros((len(mpts_list), n - 1), np.float32)
+    for row, mpts in enumerate(mpts_list):
         t0 = time.monotonic()
         src, w2 = boruvka.prim_dense_mst(x, cd2[:, mpts - 1])
         w2.block_until_ready()
         t_mst += time.monotonic() - t0
-        t0 = time.monotonic()
-        if compute_hierarchies:
-            v = np.arange(1, n)
-            results.append(
-                _extract_one(
-                    mpts,
-                    np.asarray(src)[1:],
-                    v,
-                    np.sqrt(np.asarray(w2)[1:]),
-                    n,
-                    min_cluster_size,
-                    allow_single_cluster,
-                )
-            )
-        t_h += time.monotonic() - t0
+        mst_ea[row] = np.asarray(src)[1:]
+        mst_w[row] = np.sqrt(np.asarray(w2)[1:])
     timings["mst"] = t_mst
-    timings["hierarchy"] = t_h
-    timings["total"] = timings["knn"] + t_mst + t_h
+
+    results: list[HierarchyResult] = []
+    t0 = time.monotonic()
+    if compute_hierarchies:
+        msts = MultiMSTResult(
+            n=n,
+            kmax=kmax,
+            mpts_values=mpts_list,
+            graph=None,
+            knn_d2=np.asarray(knn_d2),
+            knn_idx=np.zeros((n, 0), np.int32),
+            cd2=np.asarray(cd2),
+            mst_ea=mst_ea,
+            mst_eb=np.broadcast_to(eb, mst_ea.shape),
+            mst_w=mst_w,
+            timings={},
+        )
+        results, _ = extract_hierarchies(
+            msts,
+            min_cluster_size=min_cluster_size,
+            allow_single_cluster=allow_single_cluster,
+            cluster_selection_method=cluster_selection_method,
+        )
+    timings["hierarchy"] = time.monotonic() - t0
+    timings["total"] = timings["knn"] + t_mst + timings["hierarchy"]
     return results, timings

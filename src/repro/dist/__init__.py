@@ -1,0 +1,12 @@
+"""Distribution layer: sharding rules + cluster-parallel collectives.
+
+``sharding``         — logical-axis sharding rules (specs -> NamedSharding),
+                       activation constraints, and the sharding factories the
+                       launcher/dry-run use for params / optimizer / batches.
+``cluster_parallel`` — ring collectives for the clustering pipeline (kNN and
+                       lune counting over row-sharded point sets).
+"""
+
+from . import cluster_parallel, sharding
+
+__all__ = ["cluster_parallel", "sharding"]

@@ -1,0 +1,135 @@
+"""Cluster-parallel collectives: the clustering pipeline over sharded points.
+
+Points live row-sharded over the mesh's ``data`` axis.  ``ring_knn`` keeps
+the classic systolic structure: each shard holds its rows resident, a block
+of candidate points circulates once around the ring (``ppermute``), and every
+shard folds the visiting block into its running top-k.  Peak memory per shard
+is O(n_local * (d + k)), never O(n^2 / P).
+
+``ring_lune_count`` answers the RNG** lune-emptiness queries (kernels'
+lune_filter semantics) against the full sharded point set: every shard tests
+its local points against the (replicated) edge list and the partial verdicts
+are OR-reduced.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def ring_knn(xs, k: int, mesh, axis: str = "data"):
+    """k nearest neighbours of each point, excluding itself.
+
+    Args:
+      xs: (n, d) points, sharded P(axis, None); n must divide the axis size.
+      k: neighbours per point.
+      mesh: the mesh holding ``axis``.
+    Returns:
+      (d2, idx): (n, k) ascending squared distances and global indices,
+      sharded like the input rows.  Matches ``kernels.ops.knn`` up to f32
+      reduction order.
+    """
+    n_shards = mesh.shape[axis]
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None),),
+        out_specs=(P(axis, None), P(axis, None)),
+        check_rep=False,
+    )
+    def f(x_loc):
+        nl = x_loc.shape[0]
+        me = jax.lax.axis_index(axis)
+        rows_g = me * nl + jnp.arange(nl, dtype=jnp.int32)
+        xf = x_loc.astype(jnp.float32)
+        xn = jnp.sum(xf * xf, axis=-1)
+
+        top_d = jnp.full((nl, k), jnp.inf, jnp.float32)
+        top_i = jnp.full((nl, k), jnp.iinfo(jnp.int32).max, jnp.int32)
+        blk = x_loc
+        for t in range(n_shards):
+            src = (me - t) % n_shards
+            cols_g = src * nl + jnp.arange(nl, dtype=jnp.int32)
+            bf = blk.astype(jnp.float32)
+            bn = jnp.sum(bf * bf, axis=-1)
+            d2 = xn[:, None] + bn[None, :] - 2.0 * (xf @ bf.T)
+            d2 = jnp.maximum(d2, 0.0)
+            d2 = jnp.where(rows_g[:, None] == cols_g[None, :], jnp.inf, d2)
+            cand_d = jnp.concatenate([top_d, d2], axis=1)
+            cand_i = jnp.concatenate(
+                [top_i, jnp.broadcast_to(cols_g[None, :], d2.shape)], axis=1
+            )
+            # lexicographic (distance, index): deterministic under ties
+            cand_d, cand_i = jax.lax.sort((cand_d, cand_i), dimension=1, num_keys=2)
+            top_d, top_i = cand_d[:, :k], cand_i[:, :k]
+            if t + 1 < n_shards:
+                blk = jax.lax.ppermute(
+                    blk, axis, [(i, (i + 1) % n_shards) for i in range(n_shards)]
+                )
+        return top_d, top_i
+
+    return f(xs)
+
+
+def ring_lune_count(xs, cd2s, ea, eb, w2, mesh, axis: str = "data"):
+    """For each edge: is some point strictly inside its mrd lune?
+
+    Args:
+      xs: (n, d) points sharded P(axis, None); cd2s: (n,) squared core
+      distances sharded P(axis); ea, eb, w2: (m,) replicated edge endpoints
+      and squared mrd weights.
+    Returns:
+      (m,) bool, replicated — same verdicts as kernels.ref.lune_filter_ref
+      (including its norm-scaled keep-only cancellation margin).
+    """
+    n_shards = mesh.shape[axis]
+    m = ea.shape[0]
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(), P(), P()),
+        out_specs=P(axis),
+        check_rep=False,
+    )
+    def f(x_loc, cd2_loc, ea, eb, w2):
+        nl = x_loc.shape[0]
+        me = jax.lax.axis_index(axis)
+        cols_g = me * nl + jnp.arange(nl, dtype=jnp.int32)
+
+        # endpoint coordinates via one-hot gather from the sharded rows:
+        # each shard contributes its resident endpoints; psum completes them.
+        def gather_rows(idx):
+            onehot = (idx[:, None] == cols_g[None, :]).astype(jnp.float32)
+            xg = jax.lax.psum(onehot @ x_loc.astype(jnp.float32), axis)
+            cg = jax.lax.psum(onehot @ cd2_loc.astype(jnp.float32), axis)
+            ng = jax.lax.psum(
+                onehot @ jnp.sum(x_loc.astype(jnp.float32) ** 2, -1), axis
+            )
+            return xg, cg, ng
+
+        a_xyz, a_cd2, an = gather_rows(ea)
+        b_xyz, b_cd2, bn = gather_rows(eb)
+
+        xf = x_loc.astype(jnp.float32)
+        cn = jnp.sum(xf * xf, axis=-1)[None, :]
+        d2_ac = jnp.maximum(an[:, None] + cn - 2.0 * (a_xyz @ xf.T), 0.0)
+        d2_bc = jnp.maximum(bn[:, None] + cn - 2.0 * (b_xyz @ xf.T), 0.0)
+        mrd_ac = jnp.maximum(jnp.maximum(d2_ac, a_cd2[:, None]), cd2_loc[None, :])
+        mrd_bc = jnp.maximum(jnp.maximum(d2_bc, b_cd2[:, None]), cd2_loc[None, :])
+        eps = jnp.float32(64.0 * 1.1920929e-07)
+        is_ep = (cols_g[None, :] == ea[:, None]) | (cols_g[None, :] == eb[:, None])
+        inside = (
+            jnp.maximum(mrd_ac + eps * (an[:, None] + cn), mrd_bc + eps * (bn[:, None] + cn))
+            < w2[:, None]
+        ) & ~is_ep
+        return jnp.any(inside, axis=1)  # (m,) partial verdict for local points
+
+    partial_flat = f(xs, cd2s, ea, eb, w2)  # (n_shards * m,) row-sharded
+    return jnp.any(partial_flat.reshape(n_shards, m), axis=0)

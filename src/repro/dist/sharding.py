@@ -1,0 +1,186 @@
+"""Logical-axis sharding rules (GSPMD-style, in the spirit of maxtext).
+
+Param pytrees carry *specs*: a tuple of logical axis names per array dim
+(see models/layers.py).  A *rules* dict maps logical names to mesh axes;
+``resolve_rules`` filters it against the actual mesh so the same model code
+runs on a laptop (1 device, everything replicated) and a pod (16x16).
+
+``constrain`` is the single choke point models call on activations.  Outside
+an ``activation_context`` it is the identity, which is what keeps every
+single-device test mesh-free; inside one it applies
+``with_sharding_constraint`` under the context's mesh and rules.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Logical-name defaults.  Params: shard the "wide" dims over model; keep the
+# embedding dim replicated (row-parallel activations).  Activations: batch
+# over data, heads/ff/vocab over model.
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    # param dims
+    "embed": None,
+    "ff": "model",
+    "heads_dim": "model",
+    "kv_dim": "model",
+    "vocab": "model",
+    "experts": "model",
+    "lru": "model",
+    "inner": "model",
+    "inner_all": "model",
+    # activation dims
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_ff": "model",
+    "act_heads": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+}
+
+
+def _filter_axes(v, mesh):
+    """Drop mesh axes that don't exist (or are trivial) on this mesh."""
+    if v is None:
+        return None
+    if isinstance(v, (list, tuple)):
+        kept = tuple(a for a in v if a in mesh.shape and mesh.shape[a] > 1)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return v if v in mesh.shape and mesh.shape[v] > 1 else None
+
+
+def resolve_rules(mesh, override=None) -> dict:
+    """DEFAULT_RULES (+ overrides, e.g. from --rules JSON) valid on ``mesh``."""
+    rules = dict(DEFAULT_RULES)
+    if override:
+        rules.update(override)
+    return {k: _filter_axes(v, mesh) for k, v in rules.items()}
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, tuple) and all(s is None or isinstance(s, str) for s in x)
+
+
+def pspec_for(spec, rules) -> P:
+    """One spec tuple -> PartitionSpec under resolved rules."""
+    return P(*(rules.get(name) if name is not None else None for name in spec))
+
+
+def tree_shardings(specs, mesh, rules):
+    """Spec pytree (mirrors params) -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, pspec_for(spec, rules)), specs,
+        is_leaf=_is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# activation constraints
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_context(mesh, rules):
+    """Within this context, ``constrain`` applies sharding constraints."""
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+def constrain(x, names):
+    """Constrain activation ``x`` to the logical axes ``names`` (or no-op)."""
+    ctx = getattr(_CTX, "value", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(names):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, pspec_for(names, rules))
+    )
+
+
+# ---------------------------------------------------------------------------
+# launcher / dry-run sharding factories
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape and mesh.shape[a] > 1)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if not axes:
+        return None, 1
+    return (axes if len(axes) > 1 else axes[0]), size
+
+
+def batch_shardings(batch_sds, mesh):
+    """Shard the leading (global-batch) dim of every batch leaf over data."""
+    axes, size = _batch_axes(mesh)
+    repl = NamedSharding(mesh, P())
+
+    def one(sds):
+        if axes and getattr(sds, "ndim", 0) >= 1 and sds.shape[0] % size == 0:
+            return NamedSharding(mesh, P(axes, *([None] * (sds.ndim - 1))))
+        return repl
+
+    return jax.tree.map(one, batch_sds)
+
+
+def cache_shardings(cache_sds, mesh):
+    """Decode caches are laid out (layers, batch, ...): shard dim 1 over data."""
+    axes, size = _batch_axes(mesh)
+    repl = NamedSharding(mesh, P())
+
+    def one(sds):
+        if axes and getattr(sds, "ndim", 0) >= 2 and sds.shape[1] % size == 0:
+            return NamedSharding(mesh, P(None, axes, *([None] * (sds.ndim - 2))))
+        return repl
+
+    return jax.tree.map(one, cache_sds)
+
+
+def opt_state_shardings(p_shard, opt_sds, mesh):
+    """Optimizer-state shardings mirroring the param shardings.
+
+    Moment trees (adamw m/v, adafactor f) reuse each param's sharding when the
+    state leaf has the param's shape; int8-blockwise states shard "q" like the
+    param (same shape by design, see optim.q8_compatible) and replicate the
+    per-block scales; factored/odd-shaped states and scalars replicate.
+    """
+    repl = NamedSharding(mesh, P())
+    pdef = jax.tree.structure(p_shard)
+    pleaves = jax.tree.leaves(p_shard)
+
+    def per_state(tree):
+        try:
+            subs = pdef.flatten_up_to(tree)
+        except ValueError:
+            return jax.tree.map(lambda _: repl, tree)
+        out = []
+        for sh, sub in zip(pleaves, subs):
+            if hasattr(sub, "shape"):
+                out.append(sh)
+            elif isinstance(sub, dict) and set(sub) == {"q", "scale"}:
+                out.append({"q": sh, "scale": repl})
+            else:
+                out.append(jax.tree.map(lambda _: repl, sub))
+        return jax.tree.unflatten(pdef, out)
+
+    return {
+        k: repl if hasattr(v, "shape") else per_state(v)
+        for k, v in opt_sds.items()
+    }

@@ -1,0 +1,8 @@
+"""Pallas API-drift shims shared by the kernel modules."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# CompilerParams was TPUCompilerParams before jax 0.5
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

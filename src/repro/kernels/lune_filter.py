@@ -25,7 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from .compat import COMPILER_PARAMS as _COMPILER_PARAMS
 
 
 
@@ -148,7 +148,7 @@ def lune_filter(
         ],
         out_specs=e_spec((block_e, 1)),
         out_shape=jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -29,7 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from .compat import COMPILER_PARAMS as _COMPILER_PARAMS
 
 
 
@@ -124,7 +124,7 @@ def pairwise_topk(
             jax.ShapeDtypeStruct((n_pad, k_top), jnp.float32),
             jax.ShapeDtypeStruct((n_pad, k_top), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

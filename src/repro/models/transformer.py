@@ -29,6 +29,24 @@ from ..dist.sharding import constrain
 from . import layers as L
 
 
+@jax.custom_vjp
+def _residual_barrier(x):
+    """optimization_barrier with an explicit gradient rule (the primitive has
+    no differentiation rule on some jax versions); barrier both passes."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _residual_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _residual_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_residual_barrier.defvjp(_residual_barrier_fwd, _residual_barrier_bwd)
+
+
 def _layer_windows_py(cfg) -> list[int]:
     """Per-layer window sizes: 0 => full causal. Pure python (safe under
     eval_shape tracing)."""
@@ -224,7 +242,7 @@ def forward(p, cfg, tokens, patch_embeds=None):
         x, aux = carry
         # barrier: stops XLA from hoisting the rmsnorm f32 upcast out of the
         # backward loop as a full-residual-stack convert (10+ GiB at scale)
-        x = jax.lax.optimization_barrier(x)
+        x = _residual_barrier(x)
         x = constrain(x, ("act_batch", "act_seq", "act_embed"))
         pl, w, th = xs
         h = L.rmsnorm(x, pl["ln1"])

@@ -1,0 +1,122 @@
+"""MultiHDBSCAN estimator: baseline agreement across the whole mpts range,
+lazy-cache behaviour, selection methods, profile, and validation errors."""
+
+import numpy as np
+import pytest
+
+from repro.api import MultiHDBSCAN
+from repro.core import multi
+
+
+@pytest.fixture(scope="module")
+def blobs520():
+    """>=500-point blobs dataset (acceptance-criterion scale)."""
+    rng = np.random.default_rng(11)
+    x = np.concatenate([
+        rng.normal((0, 0), 0.35, size=(180, 2)),
+        rng.normal((5, 0), 0.5, size=(180, 2)),
+        rng.normal((2.5, 4.5), 0.4, size=(130, 2)),
+        rng.uniform(-2, 7, size=(30, 2)),
+    ]).astype(np.float32)
+    return x
+
+
+@pytest.fixture(scope="module")
+def fitted(blobs520):
+    return MultiHDBSCAN(kmax=16).fit(blobs520)
+
+
+def _assert_partitions_agree(a, b, tol=0.98):
+    """Same partition up to label permutation and rare tie-boundary points."""
+    assert abs((a >= 0).sum() - (b >= 0).sum()) <= max(2, 0.01 * len(a))
+    agree = total = 0
+    for c in np.unique(a[a >= 0]):
+        members = b[a == c]
+        members = members[members >= 0]
+        if len(members) == 0:
+            continue
+        _, counts = np.unique(members, return_counts=True)
+        agree += counts.max()
+        total += counts.sum()
+    assert total > 0 and agree / total > tol
+
+
+def test_labels_match_baseline_every_mpts(blobs520, fitted):
+    """Acceptance: labels_for(mpts) == hdbscan_baseline labels for ALL mpts
+    in [2, kmax] on a >=500-point dataset."""
+    base, _ = multi.hdbscan_baseline(blobs520, list(range(2, 17)))
+    for hb in base:
+        ours = fitted.labels_for(hb.mpts)
+        # exact MST agreement first: weight multisets must match
+        _, _, w = fitted.mst_for(hb.mpts)
+        np.testing.assert_allclose(
+            np.sort(w), np.sort(hb.mst_w), rtol=1e-5, atol=1e-6
+        )
+        assert abs(int(ours.max()) + 1 - hb.n_clusters) <= 1
+        _assert_partitions_agree(ours, hb.labels)
+
+
+def test_labels_cached_and_idempotent(fitted):
+    l1 = fitted.labels_for(5)
+    l2 = fitted.labels_for(5)
+    assert l1 is l2  # cache hit returns the same array, no recompute
+    np.testing.assert_array_equal(l1, fitted.hierarchy_for(5).labels)
+    # cache is per-mpts: another level is a different object
+    assert fitted.labels_for(6) is not l1
+
+
+def test_extraction_is_lazy(blobs520):
+    est = MultiHDBSCAN(kmax=8).fit(blobs520)
+    assert est._linkage is None and not est._hierarchy_cache
+    est.labels_for(4)
+    assert est._linkage is not None
+    assert list(est._hierarchy_cache) == [4]
+
+
+def test_fit_predict_and_default_level(blobs520):
+    labels = MultiHDBSCAN(kmax=8).fit_predict(blobs520)
+    assert labels.shape == (len(blobs520),)
+    assert labels.max() >= 2  # three blobs at the smoothed end of the range
+
+
+def test_leaf_selection_refines_eom(blobs520):
+    eom = MultiHDBSCAN(kmax=8, min_cluster_size=10).fit(blobs520)
+    leaf = MultiHDBSCAN(
+        kmax=8, min_cluster_size=10, cluster_selection_method="leaf"
+    ).fit(blobs520)
+    l_eom, l_leaf = eom.labels_for(8), leaf.labels_for(8)
+    assert l_leaf.max() >= l_eom.max()
+    for c in np.unique(l_leaf[l_leaf >= 0]):
+        parents = l_eom[l_leaf == c]
+        assert len(np.unique(parents[parents >= 0])) <= 1
+
+
+def test_mpts_profile(fitted):
+    prof = fitted.mpts_profile()
+    assert [r["mpts"] for r in prof] == list(range(2, 17))
+    for r in prof:
+        assert r["n_clusters"] == len(r["cluster_sizes"])
+        assert r["n_noise"] + sum(r["cluster_sizes"]) == fitted.n_samples_
+        assert r["total_stability"] >= 0.0
+    # the mid-range should recover the 3 planted blobs at some level
+    assert any(r["n_clusters"] == 3 for r in prof)
+
+
+def test_validation_errors(blobs520):
+    with pytest.raises(RuntimeError, match="not fitted"):
+        MultiHDBSCAN(kmax=4).labels_for(2)
+    with pytest.raises(ValueError, match="cluster_selection_method"):
+        MultiHDBSCAN(cluster_selection_method="bogus")
+    with pytest.raises(ValueError, match="kmax"):
+        MultiHDBSCAN(kmax=1)
+    with pytest.raises(ValueError, match="min_cluster_size"):
+        MultiHDBSCAN(kmax=4, min_cluster_size=1)
+    with pytest.raises(ValueError, match="min_cluster_size"):
+        multi.multi_hdbscan(np.zeros((10, 2), np.float32), 4, min_cluster_size=0)
+    with pytest.raises(ValueError, match="2-d"):
+        MultiHDBSCAN(kmax=4).fit(np.zeros(7))
+    with pytest.raises(ValueError, match="exceed kmax"):
+        MultiHDBSCAN(kmax=600).fit(blobs520)
+    est = MultiHDBSCAN(kmax=8).fit(blobs520)
+    with pytest.raises(KeyError, match="not in computed range"):
+        est.labels_for(99)

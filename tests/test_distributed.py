@@ -27,14 +27,13 @@ def test_ring_knn_matches_local():
     import numpy as np, jax, jax.numpy as jnp
     from repro.dist.cluster_parallel import ring_knn
     from repro.kernels import ops
+    from repro.launch.mesh import make_mesh_compat
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(256, 5)).astype(np.float32))
     xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
-    with jax.set_mesh(mesh):
-        d2, idx = ring_knn(xs, 7, mesh)
+    d2, idx = ring_knn(xs, 7, mesh)
     d2_ref, idx_ref = ops.knn(x, 7, backend="jnp", refine_slack=0)
     np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_ref), rtol=2e-3, atol=1e-5)
     assert (np.asarray(idx) == np.asarray(idx_ref)).mean() > 0.999
@@ -46,9 +45,9 @@ def test_ring_lune_matches_local():
     import numpy as np, jax, jax.numpy as jnp
     from repro.dist.cluster_parallel import ring_knn, ring_lune_count
     from repro.kernels import ref as kref, ops
+    from repro.launch.mesh import make_mesh_compat
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((8,), ("data",))
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(240, 4)).astype(np.float32))
     d2, _ = ops.knn(x, 6, backend="jnp")
@@ -60,8 +59,7 @@ def test_ring_lune_matches_local():
     want = np.asarray(kref.lune_filter_ref(x[ea], x[eb], cd2[ea], cd2[eb], ea, eb, w2, x, cd2))
     xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
     cds = jax.device_put(cd2, NamedSharding(mesh, P("data")))
-    with jax.set_mesh(mesh):
-        got = np.asarray(ring_lune_count(xs, cds, ea, eb, w2, mesh))
+    got = np.asarray(ring_lune_count(xs, cds, ea, eb, w2, mesh))
     assert (got == want).all()
     """)
 
@@ -90,8 +88,8 @@ def test_sharded_train_step_matches_single_device():
     l1 = float(jax.jit(step)(params, opt_init(params), batch)[2]["loss"])
 
     # sharded
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     rules = shardlib.resolve_rules(mesh)
     p_sh = shardlib.tree_shardings(specs, mesh, rules)
     params_s = jax.device_put(params, p_sh)

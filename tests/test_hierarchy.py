@@ -1,51 +1,42 @@
 """Hierarchy extraction: single-linkage vs scipy, condensed-tree semantics,
-full-pipeline label equivalence (RNG path vs dense-matrix path)."""
+full-pipeline label equivalence (RNG path vs dense-matrix path), and the
+vectorized extraction path vs the per-edge-loop reference."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from scipy.cluster.hierarchy import linkage
 
-from repro.core import hierarchy, multi, ref as oref
+from repro.core import hierarchy, linkage, multi, ref as oref
 
 
-@st.composite
-def spanning_edges(draw):
-    n = draw(st.integers(5, 60))
-    seed = draw(st.integers(0, 2**31 - 1))
+def _random_spanning_tree(n, seed, dtype=np.float32, ties=False):
     rng = np.random.default_rng(seed)
-    ea = np.arange(n - 1)
-    eb = np.array([rng.integers(i + 1, n) if i + 1 < n else n - 1 for i in range(n - 1)])
-    # random spanning tree: connect each node to a random earlier node
     ea = np.array([rng.integers(0, i + 1) for i in range(n - 1)])
     eb = np.arange(1, n)
-    w = rng.uniform(0.1, 5.0, size=n - 1)
-    return n, ea, eb, w
+    if ties:
+        w = rng.choice([0.5, 1.0, 1.5, 2.0], size=n - 1).astype(dtype)
+    else:
+        w = rng.uniform(0.1, 5.0, size=n - 1).astype(dtype)
+    return ea, eb, w
 
 
-@given(spanning_edges())
-@settings(max_examples=30, deadline=None)
-def test_single_linkage_matches_scipy(t):
-    n, ea, eb, w = t
-    Z = hierarchy.single_linkage(ea, eb, w, n)
-    # scipy needs a dense distance matrix consistent with the tree's metric:
-    # use the path-max distance implied by the MST (single-linkage ultrametric)
-    # instead just compare merge heights + sizes against scipy on the mst
-    # edge list converted to dense graph shortest-max-path: simpler check —
-    # merge DISTANCES multiset must equal edge weights, sizes must telescope.
-    np.testing.assert_allclose(np.sort(Z[:, 2]), np.sort(w))
-    assert Z[-1, 3] == n
-    assert (Z[:, 3] >= 2).all()
+def _assert_same_partition(a, b):
+    """Cluster labels equal up to a bijective relabeling (noise is -1 = -1)."""
+    assert ((a >= 0) == (b >= 0)).all()
+    for c in np.unique(a[a >= 0]):
+        members = np.unique(b[a == c])
+        assert len(members) == 1, f"cluster {c} split into {members}"
+    assert len(np.unique(a[a >= 0])) == len(np.unique(b[b >= 0]))
 
 
 def test_single_linkage_vs_scipy_dense(gauss16d):
+    from scipy.cluster.hierarchy import linkage as scipy_linkage
+    from scipy.spatial.distance import squareform
+
     x = gauss16d[:100].astype(np.float64)
     m = oref.mrd_matrix(x, 4)
     ea, eb, w = oref.mst_edges_dense(m)
     Z_ours = hierarchy.single_linkage(ea, eb, w, len(x))
-    # scipy single linkage on the mrd matrix (condensed form)
-    from scipy.spatial.distance import squareform
-    Z_scipy = linkage(squareform(m, checks=False), method="single")
+    Z_scipy = scipy_linkage(squareform(m, checks=False), method="single")
     np.testing.assert_allclose(np.sort(Z_ours[:, 2]), np.sort(Z_scipy[:, 2]), rtol=1e-9)
     # mrd ties are frequent; tied merges may interleave differently between
     # implementations (both trees valid).  Sizes must match where heights are
@@ -59,6 +50,71 @@ def test_single_linkage_vs_scipy_dense(gauss16d):
     sizes_s = Z_scipy[np.argsort(Z_scipy[:, 2], kind="stable"), 3][uniq]
     np.testing.assert_allclose(sizes_o, sizes_s)
     assert Z_ours[-1, 3] == Z_scipy[-1, 3] == len(x)
+
+
+def test_batched_linkage_matches_reference_loop():
+    """core.linkage (device, batched) == hierarchy.single_linkage (Python loop),
+    row for row — the direct unit test that the vectorized construction is
+    exact, including stable tie order."""
+    n = 80
+    eas, ebs, ws = zip(*[
+        _random_spanning_tree(n, seed, ties=(seed % 2 == 0)) for seed in range(6)
+    ])
+    left, right, h, s = linkage.single_linkage_batch(
+        np.stack(eas), np.stack(ebs), np.stack(ws), n=n
+    )
+    for row in range(6):
+        Z_ref = hierarchy.single_linkage(eas[row], ebs[row], ws[row], n)
+        Z_dev = linkage.linkage_to_Z(left[row], right[row], h[row], s[row])
+        np.testing.assert_allclose(Z_dev, Z_ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("mcs", [2, 3, 5, 25])
+def test_vectorized_condense_matches_reference(mcs):
+    """extract_condensed (pointer-doubling numpy) == condense_tree/labels_for
+    (recursive reference): identical partitions, stabilities, and fall-out
+    lambda multisets — including mcs > n/2 edge cases."""
+    for seed in range(8):
+        n = 40 + 7 * seed
+        ea, eb, w = _random_spanning_tree(n, seed, ties=(seed % 3 == 0))
+        labels_ref, tree_ref, stab_ref = hierarchy.hdbscan_labels(ea, eb, w, n, mcs)
+        Z = hierarchy.single_linkage(ea, eb, w, n)
+        labels_fast, tree_fast, stab_fast = hierarchy.extract_condensed(Z, n, mcs)
+        _assert_same_partition(labels_ref, labels_fast)
+        np.testing.assert_allclose(
+            sorted(stab_ref.values()), sorted(stab_fast.values()), rtol=1e-9
+        )
+        for t_r, t_f in [(tree_ref, tree_fast)]:
+            pr_r = t_r.child < n
+            pr_f = t_f.child < n
+            np.testing.assert_allclose(
+                np.sort(t_r.lam[pr_r]), np.sort(t_f.lam[pr_f])
+            )
+            np.testing.assert_allclose(
+                np.sort(t_r.child_size[~pr_r]), np.sort(t_f.child_size[~pr_f])
+            )
+
+
+def test_leaf_selection():
+    """Leaf selection picks the fine-grained leaves: at least as many clusters
+    as eom, and every eom cluster is a union of leaf clusters + noise."""
+    rng = np.random.default_rng(3)
+    x = np.concatenate([
+        rng.normal((0, 0), 0.2, size=(40, 2)),
+        rng.normal((1.2, 0), 0.2, size=(40, 2)),
+        rng.normal((8, 8), 0.3, size=(40, 2)),
+    ]).astype(np.float32)
+    res_eom = multi.multi_hdbscan(x, 6, min_cluster_size=8)
+    res_leaf = multi.multi_hdbscan(
+        x, 6, min_cluster_size=8, cluster_selection_method="leaf"
+    )
+    h_eom = res_eom.hierarchies[-1]
+    h_leaf = res_leaf.hierarchies[-1]
+    assert h_leaf.n_clusters >= h_eom.n_clusters
+    # leaf labels refine eom labels: no leaf cluster spans two eom clusters
+    for c in np.unique(h_leaf.labels[h_leaf.labels >= 0]):
+        parents = h_eom.labels[h_leaf.labels == c]
+        assert len(np.unique(parents[parents >= 0])) <= 1
 
 
 def test_condensed_tree_blobs(blobs):

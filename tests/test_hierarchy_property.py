@@ -1,0 +1,43 @@
+"""Property-based single-linkage checks (hypothesis; skipped if not installed)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import hierarchy, linkage  # noqa: E402
+
+
+@st.composite
+def spanning_edges(draw):
+    n = draw(st.integers(5, 60))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # random spanning tree: connect each node to a random earlier node
+    ea = np.array([rng.integers(0, i + 1) for i in range(n - 1)])
+    eb = np.arange(1, n)
+    w = rng.uniform(0.1, 5.0, size=n - 1)
+    return n, ea, eb, w
+
+
+@given(spanning_edges())
+@settings(max_examples=30, deadline=None)
+def test_single_linkage_matches_scipy(t):
+    n, ea, eb, w = t
+    Z = hierarchy.single_linkage(ea, eb, w, n)
+    # merge DISTANCES multiset must equal edge weights, sizes must telescope.
+    np.testing.assert_allclose(np.sort(Z[:, 2]), np.sort(w))
+    assert Z[-1, 3] == n
+    assert (Z[:, 3] >= 2).all()
+
+
+@given(spanning_edges())
+@settings(max_examples=20, deadline=None)
+def test_batched_linkage_matches_reference(t):
+    n, ea, eb, w = t
+    w = w.astype(np.float32)
+    Z_ref = hierarchy.single_linkage(ea, eb, w, n)
+    left, right, h, s = linkage.single_linkage_batch(ea[None], eb[None], w[None], n=n)
+    Z_dev = linkage.linkage_to_Z(left[0], right[0], h[0], s[0])
+    np.testing.assert_allclose(Z_dev, Z_ref, rtol=1e-6)

@@ -1,0 +1,55 @@
+"""Property-based Boruvka checks (hypothesis; skipped if not installed)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import boruvka, ref as oref  # noqa: E402
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(4, 60))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # random connected graph: spanning chain + extra edges
+    extra = draw(st.integers(0, 4 * n))
+    ea = np.concatenate([np.arange(n - 1), rng.integers(0, n, size=extra)])
+    eb = np.concatenate([np.arange(1, n), rng.integers(0, n, size=extra)])
+    keep = ea != eb
+    ea, eb = ea[keep], eb[keep]
+    w = rng.choice([0.25, 0.5, 1.0, 2.0, 3.0], size=len(ea)).astype(np.float32)
+    # NOTE deliberately FEW distinct weights: stresses tie-breaking
+    return n, ea.astype(np.int32), eb.astype(np.int32), w
+
+
+@given(random_graphs())
+@settings(max_examples=40, deadline=None)
+def test_boruvka_matches_scipy(g):
+    n, ea, eb, w = g
+    mask = np.asarray(
+        boruvka.boruvka_mst(jnp.asarray(ea), jnp.asarray(eb), jnp.asarray(w), n=n)
+    )
+    got = np.sort(w[mask])
+    want = oref.mst_weights_edge_list(ea, eb, w, n)
+    assert mask.sum() == n - 1
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@given(random_graphs(), st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_boruvka_range_batched(g, reps):
+    n, ea, eb, w = g
+    w_range = np.stack([w * (1 + 0.1 * i) for i in range(reps)])
+    masks = np.asarray(
+        boruvka.boruvka_mst_range(
+            jnp.asarray(ea), jnp.asarray(eb), jnp.asarray(w_range), n=n
+        )
+    )
+    for i in range(reps):
+        want = oref.mst_weights_edge_list(ea, eb, w_range[i], n)
+        np.testing.assert_allclose(np.sort(w_range[i][masks[i]]), want, rtol=1e-6)

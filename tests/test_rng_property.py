@@ -1,0 +1,43 @@
+"""Property-based metric checks (hypothesis; skipped if not installed).
+
+  * mrd symmetry + triangle inequality (Thm 1's prerequisites)
+  * core-distance monotonicity in mpts (Thm 2's prerequisite)
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import ref as oref  # noqa: E402
+
+
+@st.composite
+def point_sets(draw):
+    n = draw(st.integers(12, 40))
+    d = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.normal(scale=draw(st.floats(0.5, 10.0)), size=(n, d))
+
+
+@given(point_sets(), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_mrd_metric_properties(x, mpts):
+    mpts = min(mpts, len(x))
+    m = oref.mrd_matrix(x, mpts)
+    # symmetry
+    np.testing.assert_allclose(m, m.T)
+    # triangle inequality (Thm 1 proof): mrd(a,c) <= mrd(a,b) + mrd(b,c)
+    lhs = m[:, None, :]                      # (a, 1, c)
+    rhs = m[:, :, None] + m[None, :, :]      # (a, b) + (b, c)
+    assert (lhs <= rhs + 1e-9).all()
+
+
+@given(point_sets())
+@settings(max_examples=15, deadline=None)
+def test_core_distance_monotone(x):
+    kmax = min(10, len(x))
+    cd = oref.core_distances(x, kmax)
+    assert (np.diff(cd, axis=1) >= -1e-12).all()

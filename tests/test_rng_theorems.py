@@ -1,53 +1,23 @@
-"""Machine-checks of the paper's theorems and of the metric properties.
+"""Machine-checks of the paper's theorems.
 
-  * mrd symmetry + triangle inequality (Thm 1's prerequisites) — hypothesis
-  * core-distance monotonicity in mpts (Thm 2's prerequisite)
   * exact RNG == naive O(n^3) oracle (Def. 1)
   * Thm 2: RNG^i subseteq RNG^kmax for i < kmax (oracle-level)
   * Cor. 1: per-mpts MST weight multisets from RNG^kmax == complete graph's
     (MST weight multiset is unique for a graph => correct even under ties)
   * RNG containment chain: rng subseteq rng_star subseteq rng_ss
+
+(Property-based metric checks — mrd symmetry/triangle inequality, core
+distance monotonicity — live in test_rng_property.py and need hypothesis.)
 """
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro import kernels
 from repro.core import mrd as mrd_mod
 from repro.core import multi, ref as oref
 from repro.core import rng as rng_mod
-
-
-@st.composite
-def point_sets(draw):
-    n = draw(st.integers(12, 40))
-    d = draw(st.integers(1, 5))
-    seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
-    return rng.normal(scale=draw(st.floats(0.5, 10.0)), size=(n, d))
-
-
-@given(point_sets(), st.integers(2, 8))
-@settings(max_examples=25, deadline=None)
-def test_mrd_metric_properties(x, mpts):
-    mpts = min(mpts, len(x))
-    m = oref.mrd_matrix(x, mpts)
-    # symmetry
-    np.testing.assert_allclose(m, m.T)
-    # triangle inequality (Thm 1 proof): mrd(a,c) <= mrd(a,b) + mrd(b,c)
-    lhs = m[:, None, :]                      # (a, 1, c)
-    rhs = m[:, :, None] + m[None, :, :]      # (a, b) + (b, c)
-    assert (lhs <= rhs + 1e-9).all()
-
-
-@given(point_sets())
-@settings(max_examples=15, deadline=None)
-def test_core_distance_monotone(x):
-    kmax = min(10, len(x))
-    cd = oref.core_distances(x, kmax)
-    assert (np.diff(cd, axis=1) >= -1e-12).all()
 
 
 def test_exact_rng_matches_naive_oracle(blobs):

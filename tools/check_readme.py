@@ -1,0 +1,56 @@
+"""Docs sanity check: README python blocks must parse, and the ones that
+exercise the public API must actually run.
+
+Every ```python fenced block in README.md is compiled; blocks that import
+only from the public surface (repro, numpy) are executed in a shared
+namespace so the quickstart is guaranteed to work as printed.
+
+  PYTHONPATH=src python tools/check_readme.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def blocks(md: str) -> list[str]:
+    return re.findall(r"```python\n(.*?)```", md, flags=re.DOTALL)
+
+
+def main() -> int:
+    md = (ROOT / "README.md").read_text()
+    found = blocks(md)
+    if not found:
+        print("FAIL: README.md has no ```python blocks")
+        return 1
+
+    ns: dict = {}
+    n_run = 0
+    for i, src in enumerate(found):
+        try:
+            code = compile(src, f"README.md[block {i}]", "exec")
+        except SyntaxError as e:
+            print(f"FAIL: README block {i} does not parse: {e}")
+            return 1
+        try:
+            exec(code, ns)  # noqa: S102 - the point is to run the docs
+            n_run += 1
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL: README block {i} raised {type(e).__name__}: {e}")
+            return 1
+
+    import repro
+    import repro.api  # noqa: F401  (public surface must import)
+
+    print(f"ok: {len(found)} README blocks parsed, {n_run} executed; "
+          f"repro {repro.__version__} imports")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
