@@ -71,6 +71,83 @@ def main() -> None:
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)
 
+    pipeline = pipeline_bench()
+    print(
+        f"pipeline/multi,{pipeline['multi']['total'] * 1e6:.0f},"
+        f"speedup_vs_baseline={pipeline['speedup_vs_baseline']}x"
+    )
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
+    with open(out, "w") as f:
+        json.dump(pipeline, f, indent=1)
+        f.write("\n")
+
+
+def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0) -> dict:
+    """Stable-schema per-stage pipeline timings (written to BENCH_pipeline.json).
+
+    Each path runs twice; the per-stage rows report the WARM (second) run so
+    the trajectory tracks steady-state compute, with the cold totals kept
+    alongside (compile cost is a real deployment quantity too).
+
+    Schema (keys are append-only from PR 2 onward — perf trajectory tooling
+    diffs this file across commits, so never rename or remove a key):
+
+      schema_version, config{n,d,kmax,backend,plan}, multi{knn,rng_build,
+      mst_range,hierarchy,total}, baseline{knn,mst,hierarchy,total},
+      cold{multi_total,baseline_total}, edges{rng,complete},
+      speedup_vs_baseline
+    """
+    import time
+
+    from benchmarks import paper_sweeps
+    from repro import engine
+    from repro.core import multi
+
+    x = paper_sweeps._dataset(n, d, seed)
+    plan = engine.resolve_plan("auto")
+
+    def timed(fn):
+        t0 = time.monotonic()
+        out = fn()
+        return out, time.monotonic() - t0
+
+    mpts = list(range(2, kmax + 1))
+    (_, cold_multi) = timed(lambda: multi.multi_hdbscan(x, kmax, plan=plan))
+    (res, wall_multi) = timed(lambda: multi.multi_hdbscan(x, kmax, plan=plan))
+    (_, cold_base) = timed(lambda: multi.hdbscan_baseline(x, mpts, kmax=kmax, plan=plan))
+    ((_, tb), wall_base) = timed(lambda: multi.hdbscan_baseline(x, mpts, kmax=kmax, plan=plan))
+
+    stage = lambda t, k: round(t.get(k, 0.0), 4)  # noqa: E731
+    return {
+        "schema_version": 1,
+        "config": {
+            "n": n, "d": d, "kmax": kmax,
+            "backend": plan.backend, "plan": plan.describe(),
+        },
+        "multi": {
+            "knn": stage(res.timings, "knn"),
+            "rng_build": stage(res.timings, "rng_build"),
+            "mst_range": stage(res.timings, "mst_range"),
+            "hierarchy": stage(res.timings, "hierarchy"),
+            "total": round(wall_multi, 4),
+        },
+        "baseline": {
+            "knn": stage(tb, "knn"),
+            "mst": stage(tb, "mst"),
+            "hierarchy": stage(tb, "hierarchy"),
+            "total": round(wall_base, 4),
+        },
+        "cold": {
+            "multi_total": round(cold_multi, 4),
+            "baseline_total": round(cold_base, 4),
+        },
+        "edges": {
+            "rng": int(len(res.graph.edges)),
+            "complete": n * (n - 1) // 2,
+        },
+        "speedup_vs_baseline": round(wall_base / max(wall_multi, 1e-9), 2),
+    }
+
 
 if __name__ == "__main__":
     main()

@@ -1,8 +1,8 @@
 """repro: multi-density clustering hierarchies (RNG-HDBSCAN*) at pod scale."""
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
-__all__ = ["MultiHDBSCAN", "__version__"]
+__all__ = ["MultiHDBSCAN", "Plan", "resolve_plan", "__version__"]
 
 
 def __getattr__(name):
@@ -11,4 +11,8 @@ def __getattr__(name):
         from .api import MultiHDBSCAN
 
         return MultiHDBSCAN
+    if name in ("Plan", "resolve_plan"):
+        from . import engine
+
+        return getattr(engine, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -23,6 +23,7 @@ from typing import Sequence
 
 import numpy as np
 
+from .. import engine
 from ..core import multi
 
 
@@ -51,6 +52,18 @@ class MultiHDBSCAN:
     backend : str, optional
         Kernel backend ("pallas", "pallas_interpret", "jnp", "ref");
         default auto-selects per platform.
+    mesh : jax.sharding.Mesh, optional
+        Device mesh for the sharded execution engine.  When the mesh has a
+        non-trivial ``data`` axis the row-parallel stages (kNN, exact lune
+        scan, the per-mpts Borůvka range) shard over it; a 1-device mesh
+        (or ``None``) degrades to the single-device path, so the SAME user
+        code runs on a laptop and a pod (``dist.sharding`` resolve-rules
+        philosophy).
+    plan : "auto" | "single" | "mesh" | engine.Plan
+        Placement request, resolved once at ``fit`` against ``mesh``:
+        "auto" shards iff the mesh is usable, "single" forces the local
+        path, "mesh" errors rather than silently degrading.  Pass a
+        pre-built ``engine.Plan`` to pin every chunk/tile size explicitly.
     """
 
     def __init__(
@@ -64,6 +77,8 @@ class MultiHDBSCAN:
         allow_single_cluster: bool = False,
         variant: str = "rng_star",
         backend: str | None = None,
+        mesh=None,
+        plan: "engine.Plan | str" = "auto",
     ):
         if cluster_selection_method not in ("eom", "leaf"):
             raise ValueError(
@@ -83,6 +98,8 @@ class MultiHDBSCAN:
         self.allow_single_cluster = allow_single_cluster
         self.variant = variant
         self.backend = backend
+        self.mesh = mesh
+        self.plan = plan
 
         self._msts: multi.MultiMSTResult | None = None
         self._linkage: multi.LinkageRange | None = None
@@ -99,13 +116,17 @@ class MultiHDBSCAN:
             raise ValueError(
                 f"n_samples must exceed kmax; got n={X.shape[0]}, kmax={self.kmax}"
             )
+        # resolve the execution plan ONCE: backend + mesh placement + sizes
+        self.plan_ = engine.resolve_plan(
+            self.plan, backend=self.backend, mesh=self.mesh
+        )
         self._msts = multi.fit_msts(
             X,
             self.kmax,
             kmin=self.kmin,
             variant=self.variant,
-            backend=self.backend,
             mpts_values=self.mpts_values,
+            plan=self.plan_,
         )
         self._linkage = None
         self._hierarchy_cache = {}
@@ -202,8 +223,12 @@ class MultiHDBSCAN:
 
     def __repr__(self) -> str:
         fitted = "" if self._msts is None else f", fitted n={self.n_samples_}"
+        place = ""
+        if getattr(self, "plan_", None) is not None:
+            place = f", plan={self.plan_.describe()}"
         return (
             f"MultiHDBSCAN(kmax={self.kmax}, kmin={self.kmin}, "
             f"variant={self.variant!r}, "
-            f"cluster_selection_method={self.cluster_selection_method!r}{fitted})"
+            f"cluster_selection_method={self.cluster_selection_method!r}"
+            f"{place}{fitted})"
         )

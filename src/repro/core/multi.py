@@ -34,7 +34,7 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from .. import kernels
+from .. import engine
 from . import hierarchy, linkage
 from . import boruvka
 from . import mrd as mrd_mod
@@ -118,9 +118,21 @@ def fit_msts(
     variant: str = "rng_star",
     backend: str | None = None,
     mpts_values: Sequence[int] | None = None,
+    plan: "engine.Plan | str | None" = None,
 ) -> MultiMSTResult:
-    """kNN -> RNG^kmax -> reweight-all-mpts -> batched Borůvka, no extraction."""
-    x = jnp.asarray(x)
+    """kNN -> RNG^kmax -> reweight-all-mpts -> batched Borůvka, no extraction.
+
+    A thin composition over the resolved ``plan``: every stage is a device
+    program placed by the plan (single device or mesh), and each stage ends
+    at exactly one named ``engine.to_host`` materialization — ``knn`` (the
+    host view stored on the result, which also feeds the WSPD control
+    plane), ``graph`` (inside build_rng_graph), and ``mst`` (the final MST
+    compaction, the MST stage's single device->host sync; the row masks are
+    compacted to (R, n-1) edge ids on device first).
+    """
+    plan = plan if isinstance(plan, engine.Plan) else engine.resolve_plan(plan, backend=backend)
+    x_host = engine.io.ensure_host(x)
+    x = jnp.asarray(x_host)
     n = x.shape[0]
     if kmax < 2 or kmax > n:
         raise ValueError(f"kmax must be in [2, n]; got {kmax} (n={n})")
@@ -130,38 +142,48 @@ def fit_msts(
     timings: dict[str, float] = {}
 
     t0 = time.monotonic()
-    knn_d2, knn_idx = kernels.ops.knn(x, kmax - 1, backend=backend)
-    knn_d2.block_until_ready()
+    knn_d2, knn_idx = plan.knn(x, kmax - 1)
+    cd2_dev = mrd_mod.core_distances2(knn_d2)
+    knn_host, knn_idx_host, cd2 = engine.to_host((knn_d2, knn_idx, cd2_dev), "knn")
     timings["knn"] = time.monotonic() - t0
 
     t0 = time.monotonic()
-    graph = build_rng_graph(x, knn_d2, knn_idx, variant=variant, backend=backend)
+    graph = build_rng_graph(
+        x,
+        knn_d2,
+        knn_idx,
+        variant=variant,
+        plan=plan,
+        x_host=x_host,
+        cd_kmax_host=np.sqrt(cd2[:, -1].astype(np.float64)),
+    )
     timings["rng_build"] = time.monotonic() - t0
 
-    cd2 = np.asarray(mrd_mod.core_distances2(knn_d2))
     ea = jnp.asarray(graph.edges[:, 0], jnp.int32)
     eb = jnp.asarray(graph.edges[:, 1], jnp.int32)
 
     t0 = time.monotonic()
-    w_range = mrd_mod.reweight_all_mpts(jnp.asarray(graph.d2), jnp.asarray(cd2), ea, eb)
+    w_range = mrd_mod.reweight_all_mpts(jnp.asarray(graph.d2), cd2_dev, ea, eb)
     w_sel = w_range[jnp.asarray([m - 1 for m in mpts_list])]
-    in_mst = boruvka.boruvka_mst_range(ea, eb, w_sel, n=n)
-    in_mst.block_until_ready()
+    in_mst = plan.mst_range(ea, eb, w_sel, n=n)
 
-    # compact each row's boolean mask to (n-1) edge indices in one pass
-    in_mst_np = np.asarray(in_mst)
-    counts = in_mst_np.sum(axis=1)
+    # compact each row's boolean mask to (n-1) ascending edge indices ON
+    # DEVICE (stable argsort puts the True positions first, in column order),
+    # then materialize everything in the MST stage's one host sync.
+    sel_dev = jnp.argsort(jnp.logical_not(in_mst), axis=1, stable=True)[:, : n - 1]
+    counts_dev = jnp.sum(in_mst, axis=1)
+    mst_ea_dev = ea[sel_dev]
+    mst_eb_dev = eb[sel_dev]
+    mst_w_dev = jnp.sqrt(jnp.take_along_axis(w_sel, sel_dev, axis=1))
+    mst_ea, mst_eb, mst_w, counts = engine.to_host(
+        (mst_ea_dev, mst_eb_dev, mst_w_dev, counts_dev), "mst"
+    )
     if not np.all(counts == n - 1):
         bad = [mpts_list[i] for i in np.flatnonzero(counts != n - 1)]
         raise RuntimeError(
             f"MST incomplete for mpts={bad}: graph variant {variant!r} is "
             f"disconnected at those densities"
         )
-    sel = np.nonzero(in_mst_np)[1].reshape(len(mpts_list), n - 1)
-    rows = np.arange(len(mpts_list))[:, None]
-    mst_ea = graph.edges[sel, 0].astype(np.int32)
-    mst_eb = graph.edges[sel, 1].astype(np.int32)
-    mst_w = np.sqrt(np.asarray(w_sel)[rows, sel])
     timings["mst_range"] = time.monotonic() - t0
 
     return MultiMSTResult(
@@ -169,8 +191,8 @@ def fit_msts(
         kmax=kmax,
         mpts_values=mpts_list,
         graph=graph,
-        knn_d2=np.asarray(knn_d2),
-        knn_idx=np.asarray(knn_idx),
+        knn_d2=knn_host,
+        knn_idx=knn_idx_host,
         cd2=cd2,
         mst_ea=mst_ea,
         mst_eb=mst_eb,
@@ -274,11 +296,13 @@ def multi_hdbscan(
     backend: str | None = None,
     compute_hierarchies: bool = True,
     mpts_values: Sequence[int] | None = None,
+    plan: "engine.Plan | str | None" = None,
 ) -> MultiDensityResult:
     """All HDBSCAN* hierarchies for mpts in [kmin, kmax] via one RNG^kmax."""
     _validate_min_cluster_size(min_cluster_size)
     msts = fit_msts(
-        x, kmax, kmin=kmin, variant=variant, backend=backend, mpts_values=mpts_values
+        x, kmax, kmin=kmin, variant=variant, backend=backend,
+        mpts_values=mpts_values, plan=plan,
     )
     timings = dict(msts.timings)
     hierarchies: list[HierarchyResult] = []
@@ -319,9 +343,11 @@ def hdbscan_baseline(
     cluster_selection_method: str = "eom",
     backend: str | None = None,
     compute_hierarchies: bool = True,
+    plan: "engine.Plan | str | None" = None,
 ) -> tuple[list[HierarchyResult], dict[str, float]]:
     """Paper's baseline: shared kNN pass + dense complete-graph MST per mpts."""
     _validate_min_cluster_size(min_cluster_size)
+    plan = plan if isinstance(plan, engine.Plan) else engine.resolve_plan(plan, backend=backend)
     x = jnp.asarray(x)
     n = x.shape[0]
     mpts_list = list(mpts_values)
@@ -329,7 +355,7 @@ def hdbscan_baseline(
     timings: dict[str, float] = {}
 
     t0 = time.monotonic()
-    knn_d2, _ = kernels.ops.knn(x, kmax - 1, backend=backend)
+    knn_d2, _ = plan.knn(x, kmax - 1)
     cd2 = mrd_mod.core_distances2(knn_d2)
     cd2.block_until_ready()
     timings["knn"] = time.monotonic() - t0

@@ -7,9 +7,16 @@ Variants (paper's naming):
     (lines 13-21).  May keep some non-RNG edges.
   * ``rng``     (exact): + full-dataset lune scan for edges the cheap filter
     could not certify either way (lines 22-26) — the Pallas ``lune_filter``
-    kernel / its jnp twin.
+    kernel / its jnp twin / the mesh ring collective, per plan.
 
 All predicates run in squared space (see core.mrd).
+
+Dataflow: the WSPD tree and pair recursion are host control-plane (numpy);
+candidate generation (core.sbcn), the filter cascade, and edge weights are
+device-resident jax programs over padded/masked arrays.  The only
+device->host sync here is the final graph compaction (``engine.to_host``
+tag ``graph``; the exact variant adds one ``lune_exact`` sync for its
+unresolved-edge subset).
 """
 
 from __future__ import annotations
@@ -21,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import kernels
+from .. import engine
 from . import mrd as mrd_mod
 from . import sbcn as sbcn_mod
 from . import wspd as wspd_mod
@@ -108,6 +115,63 @@ def _knn_lune_check(x, cd2k, knn_idx, knn_d2, ea, eb, w2, *, chunk: int = 16384)
     return res.reshape(m_pad)[:m]
 
 
+def filter_cascade_device(
+    x: jax.Array,
+    cd2: jax.Array,
+    knn_idx: jax.Array,
+    knn_d2: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    valid: jax.Array,
+    *,
+    plan: engine.Plan,
+):
+    """Device filter cascade over padded/masked candidate slots.
+
+    Returns device arrays ``(keep, certified, inside_any, d2_e, w2)`` — keep
+    is the RNG* verdict (valid & not removed by the kNN-lune check);
+    certified marks edges provably in the exact RNG (w == max core dist).
+    Nothing is materialized; invalid slots read index 0 and are masked.
+    """
+    cd2k = cd2[:, -1]
+    ea = jnp.where(valid, lo, 0).astype(jnp.int32)
+    eb = jnp.where(valid, hi, 0).astype(jnp.int32)
+    d2_e = mrd_mod.edge_d2(x, ea, eb)
+    w2 = mrd_mod.mrd2_from_parts(d2_e, cd2k[ea], cd2k[eb])
+    inside_any = _knn_lune_check(
+        x, cd2k, knn_idx, knn_d2, ea, eb, w2, chunk=plan.filter_chunk
+    ) & valid
+    # core-distance certificate: w == max(c(a), c(b))  =>  definitely in RNG
+    certified = (w2 == jnp.maximum(cd2k[ea], cd2k[eb])) & valid
+    keep = valid & ~inside_any
+    return keep, certified, inside_any, d2_e, w2
+
+
+def _exact_lune_pass(keep, certified, ea_h, eb_h, w2_h, x, cd2k, plan, stats):
+    """variant="rng" (Alg. 1 lines 22-26): exact lune scan of the edges the
+    cheap filter could not certify either way.  Mutates ``stats``; returns
+    the updated keep mask (host bool array)."""
+    unresolved = keep & ~certified
+    stats["m_unresolved"] = int(unresolved.sum())
+    if not unresolved.any():
+        return keep
+    keep = keep.copy()  # device_get views are read-only
+    ui = np.nonzero(unresolved)[0]
+    nonempty = engine.to_host(
+        plan.lune_nonempty(
+            jnp.asarray(ea_h[ui], jnp.int32),
+            jnp.asarray(eb_h[ui], jnp.int32),
+            jnp.asarray(w2_h[ui]),
+            x,
+            cd2k,
+        ),
+        "lune_exact",
+    )
+    keep[ui[nonempty]] = False
+    stats["m_removed_exact"] = int(nonempty.sum())
+    return keep
+
+
 def filter_edges(
     x: jax.Array,
     cd2: jax.Array,
@@ -117,43 +181,36 @@ def filter_edges(
     variant: str,
     *,
     backend: str | None = None,
+    plan: engine.Plan | None = None,
 ) -> tuple[np.ndarray, dict]:
-    """Apply the paper's filter cascade to candidate `edges`.
+    """Apply the paper's filter cascade to an explicit (m, 2) edge array.
 
-    Returns (kept edge array, stats dict).
+    Compatibility wrapper over ``filter_cascade_device`` for host edge lists;
+    returns (kept edge array, stats dict).
     """
     if variant not in VARIANTS:
         raise ValueError(f"variant must be one of {VARIANTS}")
+    plan = engine.resolve_plan(plan, backend=backend) if not isinstance(plan, engine.Plan) else plan
     stats = {"m_candidates": int(len(edges))}
     if variant == "rng_ss" or len(edges) == 0:
         return edges, stats
 
-    cd2k = cd2[:, -1]
-    ea = jnp.asarray(edges[:, 0], jnp.int32)
-    eb = jnp.asarray(edges[:, 1], jnp.int32)
-    d2_e = mrd_mod.edge_d2(x, ea, eb)
-    w2 = mrd_mod.mrd2_from_parts(d2_e, cd2k[ea], cd2k[eb])
-
-    inside_any = np.asarray(_knn_lune_check(x, cd2k, knn_idx, knn_d2, ea, eb, w2))
-    # core-distance certificate: w == max(c(a), c(b))  =>  definitely in RNG
-    certified = np.asarray(w2 == jnp.maximum(cd2k[ea], cd2k[eb]))
-
-    keep = ~inside_any
+    lo = jnp.asarray(edges[:, 0], jnp.int32)
+    hi = jnp.asarray(edges[:, 1], jnp.int32)
+    valid = jnp.ones((len(edges),), bool)
+    keep_d, certified_d, inside_d, _, w2_d = filter_cascade_device(
+        x, cd2, knn_idx, knn_d2, lo, hi, valid, plan=plan
+    )
+    keep, certified, inside_any, w2 = engine.to_host(
+        (keep_d, certified_d, inside_d, w2_d), "graph"
+    )
     stats["m_removed_knn"] = int(inside_any.sum())
     stats["m_certified"] = int((keep & certified).sum())
 
     if variant == "rng":
-        unresolved = keep & ~certified
-        stats["m_unresolved"] = int(unresolved.sum())
-        if unresolved.any():
-            ui = np.nonzero(unresolved)[0]
-            nonempty = np.asarray(
-                kernels.ops.lune_nonempty(
-                    ea[ui], eb[ui], w2[ui], x, cd2k, backend=backend
-                )
-            )
-            keep[ui[nonempty]] = False
-            stats["m_removed_exact"] = int(nonempty.sum())
+        keep = _exact_lune_pass(
+            keep, certified, edges[:, 0], edges[:, 1], w2, x, cd2[:, -1], plan, stats
+        )
     return edges[keep], stats
 
 
@@ -165,18 +222,37 @@ def build_rng_graph(
     variant: str = "rng_star",
     separation: float = 1.0,
     backend: str | None = None,
+    plan: engine.Plan | None = None,
+    x_host: np.ndarray | None = None,
+    cd_kmax_host: np.ndarray | None = None,
 ) -> RngGraph:
     """End-to-end RNG^kmax construction (Alg. 1 lines 5-29).
 
     knn_d2/knn_idx: the single (kmax-1)-NN pass (ascending squared distances).
+    ``x_host`` / ``cd_kmax_host`` feed the WSPD control plane without a
+    device sync when the caller already holds host views (fit_msts does);
+    left None they are materialized here under the ``input`` tag.
     """
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}")
+    plan = plan if isinstance(plan, engine.Plan) else engine.resolve_plan(plan, backend=backend)
     n = x.shape[0]
     cd2 = mrd_mod.core_distances2(knn_d2)
-    cd_kmax = np.sqrt(np.asarray(cd2[:, -1], np.float64))
+    if x_host is None:
+        x_host = engine.io.ensure_host(x)
+    if cd_kmax_host is None:
+        cd_kmax_host = np.sqrt(
+            engine.io.ensure_host(cd2[:, -1]).astype(np.float64)
+        )
 
-    tree = wspd_mod.build_fair_split_tree(np.asarray(x, np.float64), cd_kmax)
+    # -- host control plane: fair-split tree + well-separated pairs ---------
+    tree = wspd_mod.build_fair_split_tree(
+        np.asarray(x_host, np.float64), cd_kmax_host
+    )
     pu, pv = wspd_mod.wspd_pairs(tree, s=separation)
-    candidates = sbcn_mod.sbcn_edges(
+
+    # -- device data plane: candidates + filter cascade, padded/masked ------
+    lo_s, hi_s, keep_s = sbcn_mod.sbcn_candidates(
         x,
         cd2[:, -1],
         tree.perm,
@@ -184,19 +260,69 @@ def build_rng_graph(
         tree.end[pu] - tree.start[pu],
         tree.start[pv],
         tree.end[pv] - tree.start[pv],
+        tile_elems=plan.sbcn_tile_elems,
+        pair_cap=plan.sbcn_pair_cap,
+        row_chunk=plan.sbcn_row_chunk,
     )
+    # Compact the sparse candidate slots to ~m edges ON DEVICE.  The filter
+    # cascade must run on the unique candidates, not the (much larger) slot
+    # array; the only thing that crosses to the host here is the COUNT — one
+    # int — which sizes the static nonzero buffer.
+    m_cand = int(engine.to_host(jnp.sum(keep_s), "candidate_count"))
+    if m_cand == 0:
+        return RngGraph(
+            edges=np.zeros((0, 2), np.int64),
+            d2=np.zeros((0,), np.float32),
+            w2_kmax=np.zeros((0,), np.float32),
+            variant=variant,
+            n_points=n,
+            stats={"m_candidates": 0, "n_wspd_pairs": int(len(pu)), "m_edges": 0},
+        )
+    cap = -(-m_cand // 4096) * 4096  # quantized: reuses filter programs
+    pos = jnp.nonzero(keep_s, size=cap, fill_value=0)[0]
+    lo = lo_s[pos]
+    hi = hi_s[pos]
+    valid = jnp.arange(cap) < m_cand
 
-    edges, stats = filter_edges(
-        x, cd2, knn_idx, knn_d2, candidates, variant, backend=backend
+    if variant == "rng_ss":
+        cd2k = cd2[:, -1]
+        ea = jnp.where(valid, lo, 0).astype(jnp.int32)
+        eb = jnp.where(valid, hi, 0).astype(jnp.int32)
+        d2_d = mrd_mod.edge_d2(x, ea, eb)
+        w2_d = mrd_mod.mrd2_from_parts(d2_d, cd2k[ea], cd2k[eb])
+        keep_d = valid
+        certified_d = inside_d = jnp.zeros_like(valid)
+    else:
+        keep_d, certified_d, inside_d, d2_d, w2_d = filter_cascade_device(
+            x, cd2, knn_idx, knn_d2, lo, hi, valid, plan=plan
+        )
+
+    # -- the one graph materialization --------------------------------------
+    lo_h, hi_h, valid_h, keep, certified, inside_any, d2_h, w2_h = engine.to_host(
+        (lo, hi, valid, keep_d, certified_d, inside_d, d2_d, w2_d), "graph"
     )
-    stats["n_wspd_pairs"] = int(len(pu))
+    stats = {
+        "m_candidates": int(valid_h.sum()),
+        "n_wspd_pairs": int(len(pu)),
+    }
+    if variant != "rng_ss":
+        stats["m_removed_knn"] = int(inside_any.sum())
+        stats["m_certified"] = int((keep & certified).sum())
+
+    if variant == "rng":
+        keep = _exact_lune_pass(
+            keep, certified, lo_h, hi_h, w2_h, x, cd2[:, -1], plan, stats
+        )
+
+    edges = np.stack(
+        [lo_h[keep].astype(np.int64), hi_h[keep].astype(np.int64)], axis=1
+    )
     stats["m_edges"] = int(len(edges))
-
-    ea = jnp.asarray(edges[:, 0], jnp.int32)
-    eb = jnp.asarray(edges[:, 1], jnp.int32)
-    d2_e = np.asarray(mrd_mod.edge_d2(x, ea, eb))
-    w2 = np.maximum(np.maximum(np.asarray(cd2[:, -1])[edges[:, 0]],
-                               np.asarray(cd2[:, -1])[edges[:, 1]]), d2_e)
     return RngGraph(
-        edges=edges, d2=d2_e, w2_kmax=w2, variant=variant, n_points=n, stats=stats
+        edges=edges,
+        d2=d2_h[keep],
+        w2_kmax=w2_h[keep],
+        variant=variant,
+        n_points=n,
+        stats=stats,
     )

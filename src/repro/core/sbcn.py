@@ -5,13 +5,20 @@ closest point in B AND a is b's closest point in A, w.r.t. ``mrd_kmax``.  The
 union over all pairs is the RNG** supergraph.
 
 Device data-plane: pairs are bucketed by padded (|A|, |B|) size class and each
-bucket is evaluated as one batched (P, amax, bmax) mrd tile + masked argmin —
-the same blocked-tile shape the MXU wants.  Tie-robustness: ALL tied
-row/column minima are kept (a superset of the single-argmin SBCN), which
-preserves the RNG-superset property under duplicate mrd values.
+size tier is ONE jitted device program — a fixed-shape (chunk, amax, bmax)
+mrd tile + masked argmin, dispatched over the tier's chunks with the results
+kept on device.  ``sbcn_candidates`` returns the whole candidate set as jax
+arrays (``lo``/``hi`` endpoint arrays, lexicographically sorted, duplicates
+masked out), so the downstream filter cascade can stay device-resident; the
+``sbcn_edges`` wrapper is the host-compacted (m, 2) numpy view.
 
-Oversized pairs (|A|*|B| above the bucket cap) are evaluated with a chunked
-min-reduction instead of one tile.
+Tie-robustness: ALL tied row/column minima are kept (a superset of the
+single-argmin SBCN), which preserves the RNG-superset property under
+duplicate mrd values.
+
+Oversized pairs (padded |A|*|B| above the bucket cap) are evaluated with a
+row-chunked two-pass min-reduction: peak memory is O(row_chunk * |B|)
+regardless of |A|.
 """
 
 from __future__ import annotations
@@ -23,20 +30,26 @@ import jax.numpy as jnp
 import numpy as np
 
 _PAIR_ELEM_CAP = 1 << 18  # max padded |A|*|B| handled by the batched path
+_TILE_ELEMS = 1 << 22     # elements per tier-program chunk
+_ROW_CHUNK = 2048         # row chunk for oversized pairs
+_SENTINEL = np.int32(np.iinfo(np.int32).max)  # invalid / duplicate slot marker
+
+_EPS = 64.0 * 1.1920929e-07
 
 
-@functools.partial(jax.jit, static_argnames=("amax", "bmax"))
-def _sbcn_bucket(x, cd2k, a_idx, b_idx, *, amax: int, bmax: int):
-    """Batched SBCN for one bucket.
+def _mutual_mask(x, cd2k, a_idx, b_idx):
+    """SBCN mask for one padded bucket chunk.
 
     a_idx: (P, amax) int32 point ids padded with -1; likewise b_idx.
     Returns (P, amax, bmax) bool mask of SBCN edges.
     """
     xa = x[a_idx]                                  # (P, amax, d)
     xb = x[b_idx]
+    an = jnp.sum(xa.astype(jnp.float32) ** 2, -1)
+    bn = jnp.sum(xb.astype(jnp.float32) ** 2, -1)
     d2 = (
-        jnp.sum(xa.astype(jnp.float32) ** 2, -1)[:, :, None]
-        + jnp.sum(xb.astype(jnp.float32) ** 2, -1)[:, None, :]
+        an[:, :, None]
+        + bn[:, None, :]
         - 2.0 * jnp.einsum("pad,pbd->pab", xa.astype(jnp.float32), xb.astype(jnp.float32))
     )
     d2 = jnp.maximum(d2, 0.0)
@@ -45,48 +58,114 @@ def _sbcn_bucket(x, cd2k, a_idx, b_idx, *, amax: int, bmax: int):
     mrd2 = jnp.where(invalid, jnp.inf, mrd2)
     # Norm-scaled tolerance: near-ties (incl. matmul-form cancellation noise)
     # are ALL kept as mutual-nearest candidates — only ever adds edges.
-    eps = jnp.float32(64.0 * 1.1920929e-07)
-    tol = eps * (
-        jnp.sum(xa.astype(jnp.float32) ** 2, -1)[:, :, None]
-        + jnp.sum(xb.astype(jnp.float32) ** 2, -1)[:, None, :]
-    )
+    tol = jnp.float32(_EPS) * (an[:, :, None] + bn[:, None, :])
     row_min = jnp.min(mrd2, axis=2, keepdims=True)     # (P, amax, 1)
     col_min = jnp.min(mrd2, axis=1, keepdims=True)     # (P, 1, bmax)
-    mutual = (
+    return (
         (mrd2 <= row_min + tol)
         & (mrd2 <= col_min + tol)
         & ~invalid
         & jnp.isfinite(mrd2)
     )
-    return mutual
 
 
 @jax.jit
-def _sbcn_large(x, cd2k, a_idx, b_idx):
-    """Chunked SBCN for one oversized pair. a_idx (na,), b_idx (nb,)."""
-    xa, xb = x[a_idx], x[b_idx]
-    cda, cdb = cd2k[a_idx], cd2k[b_idx]
+def _sbcn_tier_chunk(x, cd2k, a_idx, b_idx):
+    """One fixed-shape tier chunk -> flat (lo, hi) candidate slots.
 
-    def mrd_block(xi, cdi, xj, cdj):
-        d2 = (
-            jnp.sum(xi.astype(jnp.float32) ** 2, -1)[:, None]
-            + jnp.sum(xj.astype(jnp.float32) ** 2, -1)[None, :]
-            - 2.0 * xi.astype(jnp.float32) @ xj.astype(jnp.float32).T
-        )
-        return jnp.maximum(jnp.maximum(cdi[:, None], cdj[None, :]), jnp.maximum(d2, 0.0))
+    This is THE device program for a size tier: compiled once per
+    (chunk, amax, bmax) shape, dispatched over the tier's chunks, outputs
+    stay on device.  Non-edge slots hold the sentinel.
+    """
+    mutual = _mutual_mask(x, cd2k, a_idx, b_idx)
+    ga = jnp.broadcast_to(a_idx[:, :, None], mutual.shape)
+    gb = jnp.broadcast_to(b_idx[:, None, :], mutual.shape)
+    lo = jnp.where(mutual, jnp.minimum(ga, gb), _SENTINEL)
+    hi = jnp.where(mutual, jnp.maximum(ga, gb), _SENTINEL)
+    return lo.reshape(-1), hi.reshape(-1)
 
-    m = mrd_block(xa, cda, xb, cdb)                    # (na, nb) — one shot; caller
-    eps = jnp.float32(64.0 * 1.1920929e-07)            # chunks upstream if needed
-    tol = eps * (
-        jnp.sum(xa.astype(jnp.float32) ** 2, -1)[:, None]
-        + jnp.sum(xb.astype(jnp.float32) ** 2, -1)[None, :]
+
+@functools.partial(jax.jit, static_argnames=("row_chunk",))
+def _sbcn_large(x, cd2k, a_idx, b_idx, *, row_chunk: int = _ROW_CHUNK):
+    """Row-chunked SBCN for one oversized pair. a_idx (na,), b_idx (nb,).
+
+    Two passes over row chunks of the (na, nb) mrd tile — pass 1 reduces the
+    column minima, pass 2 re-evaluates each chunk against the global minima —
+    so peak memory is O(row_chunk * nb) float32, never the full tile.
+    Returns the (na, nb) bool mutual mask.
+    """
+    na, nb = a_idx.shape[0], b_idx.shape[0]
+    rc = min(row_chunk, na)
+    na_pad = -(-na // rc) * rc
+    a_pad = jnp.full((na_pad,), -1, a_idx.dtype).at[:na].set(a_idx)
+
+    xb = x[b_idx].astype(jnp.float32)
+    cdb = cd2k[b_idx]
+    bnorm = jnp.sum(xb * xb, -1)
+
+    def mrd_chunk(ac):
+        xa = x[ac].astype(jnp.float32)
+        anorm = jnp.sum(xa * xa, -1)
+        d2 = anorm[:, None] + bnorm[None, :] - 2.0 * xa @ xb.T
+        m = jnp.maximum(jnp.maximum(cd2k[ac][:, None], cdb[None, :]), jnp.maximum(d2, 0.0))
+        m = jnp.where((ac < 0)[:, None], jnp.inf, m)
+        tol = jnp.float32(_EPS) * (anorm[:, None] + bnorm[None, :])
+        return m, tol
+
+    chunks = a_pad.reshape(-1, rc)
+
+    def pass1(ac):
+        m, _ = mrd_chunk(ac)
+        return jnp.min(m, axis=0)                      # (nb,) partial col min
+
+    col_min = jnp.min(jax.lax.map(pass1, chunks), axis=0)[None, :]
+
+    def pass2(ac):
+        m, tol = mrd_chunk(ac)
+        row_min = jnp.min(m, axis=1, keepdims=True)
+        return (m <= row_min + tol) & (m <= col_min + tol) & jnp.isfinite(m)
+
+    mask = jax.lax.map(pass2, chunks).reshape(na_pad, nb)
+    return mask[:na]
+
+
+def _dedup_sorted(lo, hi):
+    """Lexicographically sort (lo, hi) slots; mask duplicate / sentinel slots.
+
+    Returns (lo, hi, keep): sorted endpoint arrays and a bool mask that is
+    True exactly on the first occurrence of each real edge.
+    """
+    lo, hi = jax.lax.sort((lo, hi), dimension=0, num_keys=2)
+    valid = lo != _SENTINEL
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (lo[1:] != lo[:-1]) | (hi[1:] != hi[:-1])]
     )
-    row_min = jnp.min(m, axis=1, keepdims=True)
-    col_min = jnp.min(m, axis=0, keepdims=True)
-    return (m <= row_min + tol) & (m <= col_min + tol)
+    return lo, hi, valid & first
 
 
-def sbcn_edges(
+@jax.jit
+def _count_real(lo):
+    return jnp.sum(lo != _SENTINEL)
+
+
+@jax.jit
+def _compact_slots(lo, hi, out_lo, out_hi):
+    """Scatter the real slots to the front of a (cap,)-sized buffer.
+
+    The tile programs emit mostly-sentinel slot arrays (one slot per tile
+    cell); sorting those directly is O(total cells log cells) — compacting
+    first makes the dedup sort run on ~m candidates instead.  ``out_lo`` /
+    ``out_hi`` are sentinel-filled buffers whose size bounds the real count.
+    """
+    valid = lo != _SENTINEL
+    dst = jnp.where(valid, jnp.cumsum(valid) - 1, out_lo.shape[0])
+    return (
+        out_lo.at[dst].set(lo, mode="drop"),
+        out_hi.at[dst].set(hi, mode="drop"),
+    )
+
+
+def sbcn_candidates(
     x: jax.Array,
     cd2_kmax: jax.Array,
     perm: np.ndarray,
@@ -94,13 +173,20 @@ def sbcn_edges(
     a_len: np.ndarray,
     b_start: np.ndarray,
     b_len: np.ndarray,
-) -> np.ndarray:
-    """All SBCN edges across WSPD pairs. Returns (m, 2) int64, a < b, unique.
+    *,
+    tile_elems: int = _TILE_ELEMS,
+    pair_cap: int = _PAIR_ELEM_CAP,
+    row_chunk: int = _ROW_CHUNK,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """All SBCN candidate edges across WSPD pairs, device-resident.
 
-    Pairs are given as (start, len) ranges into the fair-split tree's `perm`
-    array; all bucketing/padding is vectorized numpy (no per-pair Python).
+    The (start, len) pair ranges index the fair-split tree's ``perm`` array;
+    all bucketing/padding is vectorized numpy control-plane work (no per-pair
+    Python, no device sync).  Returns ``(lo, hi, keep)`` jax int32/bool
+    arrays: padded candidate slots sorted by (lo, hi) with ``keep`` marking
+    the unique real edges — downstream stages mask instead of compacting, so
+    nothing crosses back to the host here.
     """
-    n = x.shape[0]
     perm = perm.astype(np.int64)
 
     # canonicalize |A| <= |B|
@@ -108,28 +194,33 @@ def sbcn_edges(
     a_start, b_start = np.where(swap, b_start, a_start), np.where(swap, a_start, b_start)
     a_len, b_len = np.where(swap, b_len, a_len), np.where(swap, a_len, b_len)
 
-    out: list[np.ndarray] = []
+    los: list[jax.Array] = []
+    his: list[jax.Array] = []
 
     # fast path: singleton-singleton pairs ARE their own SBCN edge
     ss = (a_len == 1) & (b_len == 1)
     if ss.any():
-        out.append(
-            np.stack([perm[a_start[ss]], perm[b_start[ss]]], axis=1)
-        )
+        pa = perm[a_start[ss]].astype(np.int32)
+        pb = perm[b_start[ss]].astype(np.int32)
+        los.append(jnp.asarray(np.minimum(pa, pb)))
+        his.append(jnp.asarray(np.maximum(pa, pb)))
 
     rest = np.nonzero(~ss)[0]
     if len(rest):
         al, bl = a_len[rest], b_len[rest]
-        # quantize pair sizes to a few tiers: bounds JIT-shape diversity to
-        # ~10 compiled bucket kernels instead of O(log^2 n) pow2 combos.
-        tiers = np.array([1, 8, 64, 512], np.int64)
+        # quantize pair sizes to pow2 tiers: with |A| <= |B| canonicalized
+        # this is ~30 compiled tile programs, and padded tile area stays
+        # within ~20% of the intrinsic sum(|A|*|B|) — coarser tiers (e.g.
+        # {1,8,64,512}) compile fewer programs but inflate the slot arrays
+        # (and every downstream compaction) by ~4x.
+        tiers = np.array([1, 2, 4, 8, 16, 32, 64, 128, 256, 512], np.int64)
 
         def tier_of(v):
             return tiers[np.searchsorted(tiers, np.minimum(v, tiers[-1]))]
 
         ka = tier_of(al)
         kb = tier_of(bl)
-        big = (al > tiers[-1]) | (bl > tiers[-1]) | (ka * kb > _PAIR_ELEM_CAP)
+        big = (al > tiers[-1]) | (bl > tiers[-1]) | (ka * kb > pair_cap)
 
         for key in np.unique(ka[~big] * (1 << 32) + kb[~big]):
             kaa, kbb = int(key >> 32), int(key & ((1 << 32) - 1))
@@ -143,49 +234,74 @@ def sbcn_edges(
             bv = (np.arange(kbb)[None, :] < b_len[sel][:, None])
             b_pad = np.where(bv, perm[np.minimum(br, len(perm) - 1)], -1).astype(np.int32)
 
-            # fixed chunk shape: pad the last chunk so every call per tier
-            # hits the same jitted program (compile once per tier, reused
-            # across datasets/benchmark sweeps)
-            chunk = max(1, (1 << 22) // (kaa * kbb))
-            if P % chunk:
-                padrows = chunk - (P % chunk) if P > chunk else chunk - P
-                a_pad = np.concatenate(
-                    [a_pad, np.full((padrows, kaa), -1, np.int32)]
+            # chunk shape: bounded by the tile budget AND by the tier's actual
+            # pair count rounded to a power of two — padding a small tier up
+            # to the full tile budget would burn orders of magnitude more
+            # compute than the real pairs.  Pow2 rounding keeps the jit cache
+            # at ~1 program per tier per dataset scale.
+            chunk = max(1, min(tile_elems // (kaa * kbb), 1 << (P - 1).bit_length()))
+            P_pad = -(-P // chunk) * chunk
+            if P_pad != P:
+                a_pad = np.concatenate([a_pad, np.full((P_pad - P, kaa), -1, np.int32)])
+                b_pad = np.concatenate([b_pad, np.full((P_pad - P, kbb), -1, np.int32)])
+            for c0 in range(0, P_pad, chunk):
+                lo_c, hi_c = _sbcn_tier_chunk(
+                    x,
+                    cd2_kmax,
+                    jnp.asarray(a_pad[c0 : c0 + chunk]),
+                    jnp.asarray(b_pad[c0 : c0 + chunk]),
                 )
-                b_pad = np.concatenate(
-                    [b_pad, np.full((padrows, kbb), -1, np.int32)]
-                )
-            for c0 in range(0, P, chunk):
-                ap = jnp.asarray(a_pad[c0 : c0 + chunk])
-                bp = jnp.asarray(b_pad[c0 : c0 + chunk])
-                mutual = np.asarray(
-                    _sbcn_bucket(x, cd2_kmax, ap, bp, amax=kaa, bmax=kbb)
-                )
-                p, i, j = np.nonzero(mutual)
-                out.append(
-                    np.stack(
-                        [
-                            a_pad[c0 + p, i].astype(np.int64),
-                            b_pad[c0 + p, j].astype(np.int64),
-                        ],
-                        axis=1,
-                    )
-                )
+                los.append(lo_c)
+                his.append(hi_c)
 
         for gi in np.nonzero(big)[0]:
             sel = rest[gi]
-            a = perm[a_start[sel] : a_start[sel] + a_len[sel]]
-            b = perm[b_start[sel] : b_start[sel] + b_len[sel]]
-            mutual = np.asarray(
-                _sbcn_large(x, cd2_kmax, jnp.asarray(a), jnp.asarray(b))
-            )
-            i, j = np.nonzero(mutual)
-            out.append(np.stack([a[i], b[j]], axis=1))
+            a = perm[a_start[sel] : a_start[sel] + a_len[sel]].astype(np.int32)
+            b = perm[b_start[sel] : b_start[sel] + b_len[sel]].astype(np.int32)
+            aj, bj = jnp.asarray(a), jnp.asarray(b)
+            mutual = _sbcn_large(x, cd2_kmax, aj, bj, row_chunk=row_chunk)
+            ga = jnp.broadcast_to(aj[:, None], mutual.shape)
+            gb = jnp.broadcast_to(bj[None, :], mutual.shape)
+            los.append(jnp.where(mutual, jnp.minimum(ga, gb), _SENTINEL).reshape(-1))
+            his.append(jnp.where(mutual, jnp.maximum(ga, gb), _SENTINEL).reshape(-1))
 
-    if not out:
-        return np.zeros((0, 2), np.int64)
-    edges = np.concatenate(out, axis=0)
-    lo = np.minimum(edges[:, 0], edges[:, 1])
-    hi = np.maximum(edges[:, 0], edges[:, 1])
-    packed = np.unique(lo * np.int64(n) + hi)
-    return np.stack([packed // n, packed % n], axis=1)
+    if not los:
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z, jnp.zeros((0,), bool)
+    lo_all = jnp.concatenate(los)
+    hi_all = jnp.concatenate(his)
+    # ONE scalar sync sizes the compaction buffer (the only host round-trip
+    # in candidate generation); everything else stays device-resident.
+    from .. import engine
+
+    n_real = int(engine.to_host(_count_real(lo_all), "candidate_slots"))
+    if n_real == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z, jnp.zeros((0,), bool)
+    cap = -(-n_real // 4096) * 4096  # quantized: reuses the sort/dedup programs
+    buf = jnp.full((cap,), _SENTINEL, jnp.int32)
+    lo_c, hi_c = _compact_slots(lo_all, hi_all, buf, buf)
+    return _dedup_sorted(lo_c, hi_c)
+
+
+def sbcn_edges(
+    x: jax.Array,
+    cd2_kmax: jax.Array,
+    perm: np.ndarray,
+    a_start: np.ndarray,
+    a_len: np.ndarray,
+    b_start: np.ndarray,
+    b_len: np.ndarray,
+) -> np.ndarray:
+    """Host-compacted SBCN edges: (m, 2) int64, a < b, unique.
+
+    One materialization of the device candidate set (the pipeline proper
+    stays on ``sbcn_candidates`` and defers this to the graph compaction).
+    """
+    from .. import engine
+
+    lo, hi, keep = sbcn_candidates(
+        x, cd2_kmax, perm, a_start, a_len, b_start, b_len
+    )
+    lo, hi, keep = engine.to_host((lo, hi, keep), "candidates")
+    return np.stack([lo[keep].astype(np.int64), hi[keep].astype(np.int64)], axis=1)

@@ -10,6 +10,15 @@ is O(n_local * (d + k)), never O(n^2 / P).
 lune_filter semantics) against the full sharded point set: every shard tests
 its local points against the (replicated) edge list and the partial verdicts
 are OR-reduced.
+
+``sharded_mst_range`` runs the batched Borůvka with the R-row mpts axis
+sharded over the mesh: the rows are independent reweightings of the same
+edge list, so each shard solves its rows with zero cross-shard traffic.
+
+These collectives are first-class backends of ``kernels.ops`` (via
+``backend="mesh"``) and are normally reached through an ``engine.Plan``
+rather than called directly; ``pad_rows`` handles the n-not-divisible case
+at that boundary.
 """
 
 from __future__ import annotations
@@ -19,22 +28,48 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 
-def ring_knn(xs, k: int, mesh, axis: str = "data"):
+def pad_rows(x, n_shards: int, fill=0):
+    """Pad the leading axis to a multiple of ``n_shards`` (device-side)."""
+    n = x.shape[0]
+    n_pad = -(-n // n_shards) * n_shards
+    if n_pad == n:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((n_pad - n,) + x.shape[1:], fill, x.dtype)]
+    )
+
+
+def shard_rows(x, mesh, axis: str = "data"):
+    """Place an array with its leading axis sharded over ``axis``."""
+    spec = P(axis, *([None] * (x.ndim - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def replicate(x, mesh):
+    """Place an array fully replicated over ``mesh``."""
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def ring_knn(xs, k: int, mesh, axis: str = "data", n_valid: int | None = None):
     """k nearest neighbours of each point, excluding itself.
 
     Args:
-      xs: (n, d) points, sharded P(axis, None); n must divide the axis size.
+      xs: (n, d) points, sharded P(axis, None); n must divide the axis size
+        (pad with ``pad_rows`` + pass ``n_valid`` otherwise).
       k: neighbours per point.
       mesh: the mesh holding ``axis``.
+      n_valid: number of real rows; rows >= n_valid are padding and are never
+        reported as neighbours (their own outputs are garbage — slice them).
     Returns:
       (d2, idx): (n, k) ascending squared distances and global indices,
       sharded like the input rows.  Matches ``kernels.ops.knn`` up to f32
       reduction order.
     """
     n_shards = mesh.shape[axis]
+    n_valid = xs.shape[0] if n_valid is None else n_valid
 
     @functools.partial(
         shard_map,
@@ -60,7 +95,8 @@ def ring_knn(xs, k: int, mesh, axis: str = "data"):
             bn = jnp.sum(bf * bf, axis=-1)
             d2 = xn[:, None] + bn[None, :] - 2.0 * (xf @ bf.T)
             d2 = jnp.maximum(d2, 0.0)
-            d2 = jnp.where(rows_g[:, None] == cols_g[None, :], jnp.inf, d2)
+            bad = (rows_g[:, None] == cols_g[None, :]) | (cols_g[None, :] >= n_valid)
+            d2 = jnp.where(bad, jnp.inf, d2)
             cand_d = jnp.concatenate([top_d, d2], axis=1)
             cand_i = jnp.concatenate(
                 [top_i, jnp.broadcast_to(cols_g[None, :], d2.shape)], axis=1
@@ -77,19 +113,23 @@ def ring_knn(xs, k: int, mesh, axis: str = "data"):
     return f(xs)
 
 
-def ring_lune_count(xs, cd2s, ea, eb, w2, mesh, axis: str = "data"):
+def ring_lune_count(xs, cd2s, ea, eb, w2, mesh, axis: str = "data",
+                    n_valid: int | None = None):
     """For each edge: is some point strictly inside its mrd lune?
 
     Args:
       xs: (n, d) points sharded P(axis, None); cd2s: (n,) squared core
       distances sharded P(axis); ea, eb, w2: (m,) replicated edge endpoints
       and squared mrd weights.
+      n_valid: number of real rows; padded rows (>= n_valid, zero-filled) are
+      never counted as lune occupants.
     Returns:
       (m,) bool, replicated — same verdicts as kernels.ref.lune_filter_ref
       (including its norm-scaled keep-only cancellation margin).
     """
     n_shards = mesh.shape[axis]
     m = ea.shape[0]
+    n_valid = xs.shape[0] if n_valid is None else n_valid
 
     @functools.partial(
         shard_map,
@@ -124,12 +164,53 @@ def ring_lune_count(xs, cd2s, ea, eb, w2, mesh, axis: str = "data"):
         mrd_ac = jnp.maximum(jnp.maximum(d2_ac, a_cd2[:, None]), cd2_loc[None, :])
         mrd_bc = jnp.maximum(jnp.maximum(d2_bc, b_cd2[:, None]), cd2_loc[None, :])
         eps = jnp.float32(64.0 * 1.1920929e-07)
-        is_ep = (cols_g[None, :] == ea[:, None]) | (cols_g[None, :] == eb[:, None])
+        skip = (
+            (cols_g[None, :] == ea[:, None])
+            | (cols_g[None, :] == eb[:, None])
+            | (cols_g[None, :] >= n_valid)
+        )
         inside = (
             jnp.maximum(mrd_ac + eps * (an[:, None] + cn), mrd_bc + eps * (bn[:, None] + cn))
             < w2[:, None]
-        ) & ~is_ep
+        ) & ~skip
         return jnp.any(inside, axis=1)  # (m,) partial verdict for local points
 
     partial_flat = f(xs, cd2s, ea, eb, w2)  # (n_shards * m,) row-sharded
     return jnp.any(partial_flat.reshape(n_shards, m), axis=0)
+
+
+def sharded_mst_range(ea, eb, w_range, *, n: int, mesh, axis: str = "data"):
+    """Batched Borůvka with the R independent mpts rows sharded over ``axis``.
+
+    Each row of ``w_range`` is one reweighting of the same (replicated) edge
+    list — embarrassingly parallel, so every shard runs its rows' full
+    Borůvka loop locally with no per-round collective.  R is padded to a
+    multiple of the axis size with copies of the last row (same weights =>
+    same converged MST; padded rows are sliced off).
+
+    Returns in_mst (R, m) bool, same semantics as boruvka_mst_range.
+    """
+    from ..core import boruvka  # function-level: dist must stay core-free at import
+
+    n_shards = mesh.shape[axis]
+    R = w_range.shape[0]
+    R_pad = -(-R // n_shards) * n_shards
+    if R_pad != R:
+        w_range = jnp.concatenate(
+            [w_range, jnp.broadcast_to(w_range[-1:], (R_pad - R, w_range.shape[1]))]
+        )
+    w_s = shard_rows(jnp.asarray(w_range), mesh, axis)
+    ea_r = replicate(jnp.asarray(ea, jnp.int32), mesh)
+    eb_r = replicate(jnp.asarray(eb, jnp.int32), mesh)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axis, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )
+    def f(ea_l, eb_l, w_l):
+        return boruvka.boruvka_mst_range(ea_l, eb_l, w_l, n=n)
+
+    return f(ea_r, eb_r, w_s)[:R]

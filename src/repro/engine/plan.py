@@ -1,0 +1,162 @@
+"""The `Plan`: backend + optional mesh + chunk/tile sizes, resolved once.
+
+A Plan is the single value threaded through every pipeline stage; stages ask
+it "run the kNN", "run the lune check", "run the MST range" and never look at
+the hardware themselves.  Placement resolution follows the
+``dist.sharding.resolve_rules`` philosophy — the *request* ("auto" / "single"
+/ "mesh") is filtered against the mesh that actually exists, so
+``MultiHDBSCAN(mesh=some_mesh)`` degrades gracefully to the single-device
+path on a laptop (1-device mesh, or no ``data`` axis) and shards on a pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+PLAN_REQUESTS = ("auto", "single", "mesh")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Resolved execution plan for the clustering pipeline.
+
+    ``backend`` is the kernel backend for compute-local dispatch ("pallas",
+    "pallas_interpret", "jnp", "ref"); when ``mesh`` is set the row-parallel
+    stages (kNN, exact lune scan, Borůvka range) take the mesh path instead
+    and ``backend`` still governs any residual local compute.  All chunk and
+    tile sizes live here so a deployment can tune them in exactly one place.
+    """
+
+    backend: str
+    mesh: Any = None            # jax.sharding.Mesh | None (None = single device)
+    axis: str = "data"          # mesh axis rows are sharded over
+    # -- tile/chunk sizes (device-memory knobs), resolved once --------------
+    knn_block_q: int = 256      # pallas kNN query tile
+    knn_block_k: int = 256      # pallas kNN key tile
+    knn_refine_slack: int = 8   # extra candidates before the exact refine
+    lune_block_e: int = 256     # pallas lune-filter edge tile
+    lune_block_c: int = 512     # pallas lune-filter candidate tile
+    filter_chunk: int = 16384   # kNN-lune filter cascade edge chunk
+    sbcn_tile_elems: int = 1 << 22  # elements per SBCN tier-program chunk
+    sbcn_pair_cap: int = 1 << 18    # max padded |A|*|B| on the bucketed path
+    sbcn_row_chunk: int = 2048      # row chunk for oversized WSPD pairs
+
+    # -- placement ---------------------------------------------------------
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis] if self.mesh is not None else 1
+
+    # -- stage dispatch ----------------------------------------------------
+
+    def knn(self, x, k_top: int):
+        """(d2 ascending, idx): mesh ring path when sharded, kernels otherwise."""
+        from .. import kernels
+
+        return kernels.ops.knn(
+            x,
+            k_top,
+            backend="mesh" if self.sharded else self.backend,
+            mesh=self.mesh,
+            mesh_axis=self.axis,
+            block_q=self.knn_block_q,
+            block_k=self.knn_block_k,
+            refine_slack=self.knn_refine_slack,
+        )
+
+    def lune_nonempty(self, ea, eb, w2, points, cd2):
+        """Exact lune-emptiness verdicts for an edge list, placed per plan."""
+        from .. import kernels
+
+        return kernels.ops.lune_nonempty(
+            ea,
+            eb,
+            w2,
+            points,
+            cd2,
+            backend="mesh" if self.sharded else self.backend,
+            mesh=self.mesh,
+            mesh_axis=self.axis,
+            block_e=self.lune_block_e,
+            block_c=self.lune_block_c,
+        )
+
+    def mst_range(self, ea, eb, w_range, *, n: int):
+        """All R MSTs; rows (independent mpts values) shard over the mesh."""
+        if self.sharded:
+            from ..dist import cluster_parallel
+
+            return cluster_parallel.sharded_mst_range(
+                ea, eb, w_range, n=n, mesh=self.mesh, axis=self.axis
+            )
+        from ..core import boruvka
+
+        return boruvka.boruvka_mst_range(ea, eb, w_range, n=n)
+
+    def describe(self) -> str:
+        place = (
+            f"mesh[{self.axis}={self.n_shards}]" if self.sharded else "single"
+        )
+        return f"Plan(backend={self.backend!r}, placement={place})"
+
+
+def _mesh_usable(mesh, axis: str) -> bool:
+    """A mesh is worth sharding over iff the row axis exists and is >1."""
+    return (
+        mesh is not None
+        and axis in getattr(mesh, "shape", {})
+        and mesh.shape[axis] > 1
+    )
+
+
+def resolve_plan(
+    plan: Plan | str | None = "auto",
+    *,
+    backend: str | None = None,
+    mesh=None,
+    axis: str = "data",
+    **sizes,
+) -> Plan:
+    """Resolve a plan request against the actual hardware, once.
+
+    ``plan`` is either an already-resolved ``Plan`` (returned as-is), or one
+    of the requests:
+
+      * ``"auto"`` (default) — shard iff ``mesh`` has a non-trivial ``axis``;
+        otherwise single-device.  This is the laptop==pod path.
+      * ``"single"`` — force the single-device path (mesh ignored).
+      * ``"mesh"`` — require the mesh path; raises if ``mesh`` is unusable,
+        instead of silently degrading.
+
+    ``backend=None`` auto-selects per platform (pallas on TPU, jnp elsewhere).
+    Extra keyword args override individual chunk/tile sizes.
+    """
+    if isinstance(plan, Plan):
+        if mesh is not None and plan.mesh is not mesh:
+            raise ValueError(
+                "got both a pre-built Plan and a different mesh=; build the "
+                "Plan against that mesh (resolve_plan(..., mesh=mesh) or "
+                "dataclasses.replace(plan, mesh=mesh)) instead of passing both"
+            )
+        return plan
+    if plan is None:
+        plan = "auto"
+    if plan not in PLAN_REQUESTS:
+        raise ValueError(f"plan must be one of {PLAN_REQUESTS} or a Plan; got {plan!r}")
+
+    from .. import kernels
+
+    backend = backend or kernels.ops.default_backend()
+    usable = _mesh_usable(mesh, axis)
+    if plan == "mesh" and not usable:
+        raise ValueError(
+            f"plan='mesh' requires a mesh with a non-trivial {axis!r} axis; "
+            f"got mesh={mesh!r}"
+        )
+    use_mesh = usable and plan in ("auto", "mesh")
+    return Plan(backend=backend, mesh=mesh if use_mesh else None, axis=axis, **sizes)

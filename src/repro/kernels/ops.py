@@ -7,8 +7,18 @@ Backends:
                               structure; this is also what the CPU benchmarks
                               use (interpret mode is a Python-level emulator
                               and is not meaningful to time).
+  * ``"ref"``               — the pure-jnp oracles (tests).
+  * ``"mesh"``              — the multi-device ring collectives from
+                              ``dist.cluster_parallel`` over a row-sharded
+                              point set; requires ``mesh=`` (normally reached
+                              through an ``engine.Plan``, which resolves the
+                              mesh once).  Handles n not divisible by the
+                              axis size via zero-padding + validity masks.
 
-The default backend is chosen from the platform at call time.
+The default backend is chosen from the platform at call time.  Every kNN
+backend — including ``ref`` and ``mesh`` — over-selects candidates and runs
+the SAME diff-based ``_refine_knn`` pass, so near-tie neighbour ordering is
+identical across backends.
 """
 
 from __future__ import annotations
@@ -114,16 +124,38 @@ def knn(
     k_top: int,
     *,
     backend: str | None = None,
+    mesh=None,
+    mesh_axis: str = "data",
     block_q: int = 256,
     block_k: int = 256,
     refine_slack: int = 8,
 ) -> tuple[jax.Array, jax.Array]:
-    """k nearest neighbors of each point. Returns (d2 ascending, global idx)."""
+    """k nearest neighbors of each point. Returns (d2 ascending, global idx).
+
+    All backends route their over-selected candidates through the same
+    ``_refine_knn`` exact re-evaluation, so backends agree on near-tie
+    neighbour ordering (the matmul-form backends lose ~1e-3 relative accuracy
+    to cancellation; the ref oracle doesn't — without the shared refine the
+    two can order tied neighbours differently).
+    """
     backend = backend or default_backend()
-    if backend == "ref":
-        return ref.knn_ref(x, k_top)
-    k_eff = min(x.shape[0] - 1, k_top + refine_slack)
-    if backend == "jnp":
+    n = x.shape[0]
+    k_eff = min(n - 1, k_top + refine_slack)
+    if backend == "mesh":
+        if mesh is None:
+            raise ValueError("backend='mesh' requires mesh=")
+        from ..dist import cluster_parallel as cp
+
+        n_shards = mesh.shape[mesh_axis]
+        xp = cp.shard_rows(cp.pad_rows(jnp.asarray(x), n_shards), mesh, mesh_axis)
+        d2, idx = cp.ring_knn(xp, k_eff, mesh, mesh_axis, n_valid=n)
+        d2, idx = d2[:n], idx[:n]
+        # the exact refine pass runs replicated on the same mesh (gathers of
+        # the full point set — cheap relative to the ring pass)
+        x = cp.replicate(jnp.asarray(x), mesh)
+    elif backend == "ref":
+        d2, idx = ref.knn_ref(x, k_eff)
+    elif backend == "jnp":
         d2, idx = _knn_jnp_blocked(x, k_top=k_eff)
     else:
         interpret = backend == "pallas_interpret"
@@ -175,12 +207,33 @@ def lune_nonempty(
     cd2: jax.Array,
     *,
     backend: str | None = None,
+    mesh=None,
+    mesh_axis: str = "data",
     block_e: int = 256,
     block_c: int = 512,
 ) -> jax.Array:
     """(m,) bool — True where lune(a,b) contains a point strictly inside."""
     backend = backend or default_backend()
-    if backend == "jnp":
+    if backend == "mesh":
+        if mesh is None:
+            raise ValueError("backend='mesh' requires mesh=")
+        from ..dist import cluster_parallel as cp
+
+        n = points.shape[0]
+        n_shards = mesh.shape[mesh_axis]
+        xp = cp.shard_rows(cp.pad_rows(jnp.asarray(points), n_shards), mesh, mesh_axis)
+        cp2 = cp.shard_rows(cp.pad_rows(jnp.asarray(cd2), n_shards), mesh, mesh_axis)
+        return cp.ring_lune_count(
+            xp,
+            cp2,
+            cp.replicate(jnp.asarray(edges_a, jnp.int32), mesh),
+            cp.replicate(jnp.asarray(edges_b, jnp.int32), mesh),
+            cp.replicate(jnp.asarray(w2), mesh),
+            mesh,
+            mesh_axis,
+            n_valid=n,
+        )
+    if backend in ("jnp", "ref"):
         return _lune_jnp(edges_a, edges_b, w2, points, cd2)
     interpret = backend == "pallas_interpret"
     return _lune_pallas(

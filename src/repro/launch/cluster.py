@@ -44,40 +44,41 @@ def dryrun(n: int, dim: int, kmax: int, multi_pod: bool, out: str | None,
     m_edges = 8 * n  # RNG edge budget: ~8n edges (paper Fig 6 scale)
     results = {}
 
-    with jax.set_mesh(mesh):
-        # 1) ring kNN
-        tile_dt = jnp.bfloat16 if bf16_tiles else jnp.float32
-        knn_fn = jax.jit(
-            lambda x: ring_knn(x, kmax, mesh, tile_dtype=tile_dt),
-            in_shardings=(dspec2,),
-            out_shardings=(dspec2, dspec2),
-        )
-        lowered = knn_fn.lower(x_sds)
-        compiled = lowered.compile()
-        results["ring_knn"] = _report("ring_knn", compiled, n_chips)
+    # 1) ring kNN (the engine.Plan mesh path's kNN backend)
+    knn_fn = jax.jit(
+        lambda x: ring_knn(x, kmax, mesh),
+        in_shardings=(dspec2,),
+        out_shardings=(dspec2, dspec2),
+    )
+    lowered = knn_fn.lower(x_sds)
+    compiled = lowered.compile()
+    results["ring_knn"] = _report("ring_knn", compiled, n_chips)
 
-        # 2) ring lune filter
-        cd_sds = jax.ShapeDtypeStruct((n,), jnp.float32)
-        e_sds = jax.ShapeDtypeStruct((m_edges,), jnp.int32)
-        w_sds = jax.ShapeDtypeStruct((m_edges,), jnp.float32)
-        lune_fn = jax.jit(
-            lambda x, cd, ea, eb, w: ring_lune_count(x, cd, ea, eb, w, mesh),
-            in_shardings=(dspec2, dspec1, dspec1, dspec1, dspec1),
-            out_shardings=dspec1,
-        )
-        compiled = lune_fn.lower(x_sds, cd_sds, e_sds, e_sds, w_sds).compile()
-        results["ring_lune"] = _report("ring_lune", compiled, n_chips)
+    # 2) ring lune filter
+    cd_sds = jax.ShapeDtypeStruct((n,), jnp.float32)
+    e_sds = jax.ShapeDtypeStruct((m_edges,), jnp.int32)
+    w_sds = jax.ShapeDtypeStruct((m_edges,), jnp.float32)
+    lune_fn = jax.jit(
+        lambda x, cd, ea, eb, w: ring_lune_count(x, cd, ea, eb, w, mesh),
+        in_shardings=(dspec2, dspec1, dspec1, dspec1, dspec1),
+        out_shardings=dspec1,
+    )
+    compiled = lune_fn.lower(x_sds, cd_sds, e_sds, e_sds, w_sds).compile()
+    results["ring_lune"] = _report("ring_lune", compiled, n_chips)
 
-        # 3) batched Boruvka over the mpts range (edges replicated: the edge
-        # list is ~8n ints; labels are the shared state)
-        wr_sds = jax.ShapeDtypeStruct((kmax, m_edges), jnp.float32)
-        bor_fn = jax.jit(
-            lambda ea, eb, w: boruvka.boruvka_mst_range(ea, eb, w, n=n),
-            in_shardings=(repl, repl, NamedSharding(mesh, P(None, axes))),
-            out_shardings=NamedSharding(mesh, P(None, axes)),
-        )
-        compiled = bor_fn.lower(e_sds, e_sds, wr_sds).compile()
-        results["boruvka_range"] = _report("boruvka_range", compiled, n_chips)
+    # 3) batched Boruvka over the mpts range: the R independent mpts rows
+    # shard over the data axis (engine.Plan.mst_range semantics — including
+    # its row padding to the axis size); the edge list (~8n ints) replicates
+    data_ax = mesh.shape["data"]
+    r_pad = -(-kmax // data_ax) * data_ax
+    wr_sds = jax.ShapeDtypeStruct((r_pad, m_edges), jnp.float32)
+    bor_fn = jax.jit(
+        lambda ea, eb, w: boruvka.boruvka_mst_range(ea, eb, w, n=n),
+        in_shardings=(repl, repl, NamedSharding(mesh, P("data", None))),
+        out_shardings=NamedSharding(mesh, P("data", None)),
+    )
+    compiled = bor_fn.lower(e_sds, e_sds, wr_sds).compile()
+    results["boruvka_range"] = _report("boruvka_range", compiled, n_chips)
 
     if out:
         os.makedirs(out, exist_ok=True)

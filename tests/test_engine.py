@@ -1,0 +1,283 @@
+"""Engine/Plan layer: placement resolution, transfer accounting, backend
+parity.  Multi-device cases run in subprocesses (8 fake CPU devices) so the
+main pytest process keeps its single-device view."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_dev: int = 8):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# plan resolution (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_plan_single_device():
+    from repro import engine
+
+    p = engine.resolve_plan("auto")
+    assert not p.sharded and p.n_shards == 1
+    assert engine.resolve_plan(p) is p  # already-resolved passthrough
+    assert engine.resolve_plan(None).backend == p.backend
+    with pytest.raises(ValueError):
+        engine.resolve_plan("mesh")  # no usable mesh -> no silent degrade
+    with pytest.raises(ValueError):
+        engine.resolve_plan("bogus")
+
+
+def test_trivial_mesh_degrades_to_single():
+    """A 1-device mesh (laptop) resolves to the single-device path."""
+    from repro import engine
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1,), ("data",))
+    p = engine.resolve_plan("auto", mesh=mesh)
+    assert not p.sharded
+    # axis present but trivial: "mesh" request must refuse, not degrade
+    with pytest.raises(ValueError):
+        engine.resolve_plan("mesh", mesh=mesh)
+
+
+def test_estimator_resolves_plan_once(blobs):
+    from repro.api import MultiHDBSCAN
+
+    x, _ = blobs
+    est = MultiHDBSCAN(kmax=6).fit(x)
+    assert est.plan_.describe().startswith("Plan(")
+    assert not est.plan_.sharded
+
+
+# ---------------------------------------------------------------------------
+# transfer accounting (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_msts_transfer_ledger(blobs):
+    """fit_msts syncs device->host ONLY at the named materialization points,
+    with the MST stage contributing exactly one — and the armed jax transfer
+    guard proves there are no implicit transfers anywhere in the pipeline."""
+    from repro import engine
+    from repro.core import multi
+
+    x, _ = blobs
+    with engine.transfer_ledger() as led:
+        msts = multi.fit_msts(x, 8)
+    assert engine.io.tags(led) == [
+        "knn", "candidate_slots", "candidate_count", "graph", "mst"
+    ]
+    assert engine.io.count(led, "mst") == 1
+    # the two candidate syncs are single scalars, not bulk transfers
+    assert dict(led)["candidate_slots"] <= 8
+    assert dict(led)["candidate_count"] <= 8
+    assert msts.mst_ea.shape == (7, len(x) - 1)
+
+
+def test_fit_msts_exact_variant_ledger(blobs):
+    from repro import engine
+    from repro.core import multi
+
+    x, _ = blobs
+    with engine.transfer_ledger() as led:
+        multi.fit_msts(x, 6, variant="rng")
+    tags = engine.io.tags(led)
+    assert tags[0] == "knn" and tags[-1] == "mst"
+    assert set(tags) <= {
+        "knn", "candidate_slots", "candidate_count", "graph", "lune_exact", "mst"
+    }
+
+
+# ---------------------------------------------------------------------------
+# backend parity satellites (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_ref_backend_routes_through_refine():
+    """ops.knn(backend="ref") must agree with jnp on near-tie ordering: both
+    route their candidates through the same _refine_knn pass."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(3)
+    # lattice + jitter: lots of exactly/nearly tied neighbour distances
+    base = np.stack(np.meshgrid(np.arange(12), np.arange(12)), -1).reshape(-1, 2)
+    x = (base + rng.normal(0, 1e-4, base.shape)).astype(np.float32)
+    import jax.numpy as jnp
+
+    xj = jnp.asarray(x)
+    d_r, i_r = ops.knn(xj, 8, backend="ref")
+    d_j, i_j = ops.knn(xj, 8, backend="jnp")
+    np.testing.assert_allclose(np.asarray(d_r), np.asarray(d_j), rtol=1e-6, atol=1e-7)
+    assert (np.asarray(i_r) == np.asarray(i_j)).all()
+
+
+def test_sbcn_large_row_chunking_matches_unchunked():
+    """The oversized-pair path must give identical verdicts regardless of
+    row_chunk (bounded peak memory, same SBCN mask)."""
+    import jax.numpy as jnp
+
+    from repro.core import sbcn
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(700, 3)).astype(np.float32))
+    cd2k = jnp.asarray(rng.uniform(0.1, 0.5, size=700).astype(np.float32))
+    a = jnp.asarray(rng.permutation(700)[:600].astype(np.int32))
+    b = jnp.asarray(rng.permutation(700)[:90].astype(np.int32))
+    full = np.asarray(sbcn._sbcn_large(x, cd2k, a, b, row_chunk=1024))
+    chunked = np.asarray(sbcn._sbcn_large(x, cd2k, a, b, row_chunk=64))
+    assert full.shape == (600, 90)
+    assert (full == chunked).all()
+
+
+def test_sbcn_edges_wrapper_matches_candidates(blobs):
+    """sbcn_edges (host view) == compacted sbcn_candidates (device view)."""
+    import jax.numpy as jnp
+
+    from repro.core import mrd, sbcn, wspd
+    from repro.kernels import ops
+
+    x, _ = blobs
+    xj = jnp.asarray(x)
+    knn_d2, _ = ops.knn(xj, 7)
+    cd2 = mrd.core_distances2(knn_d2)
+    cdk = np.sqrt(np.asarray(cd2[:, -1], np.float64))
+    tree = wspd.build_fair_split_tree(np.asarray(x, np.float64), cdk)
+    pu, pv = wspd.wspd_pairs(tree)
+    args = (
+        tree.perm,
+        tree.start[pu], tree.end[pu] - tree.start[pu],
+        tree.start[pv], tree.end[pv] - tree.start[pv],
+    )
+    edges = sbcn.sbcn_edges(xj, cd2[:, -1], *args)
+    lo, hi, keep = sbcn.sbcn_candidates(xj, cd2[:, -1], *args)
+    lo, hi, keep = np.asarray(lo), np.asarray(hi), np.asarray(keep)
+    np.testing.assert_array_equal(edges[:, 0], lo[keep])
+    np.testing.assert_array_equal(edges[:, 1], hi[keep])
+    # uniqueness + canonical a < b ordering preserved
+    assert (edges[:, 0] < edges[:, 1]).all()
+    packed = edges[:, 0] * len(x) + edges[:, 1]
+    assert len(np.unique(packed)) == len(packed)
+
+
+# ---------------------------------------------------------------------------
+# mesh backends + sharded pipeline parity (8 fake devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_knn_backend_matches_local():
+    """kernels.ops.knn(backend='mesh') == backend='jnp', including the shared
+    refine pass, with n NOT divisible by the axis size."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((8,), ("data",))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(261, 5)).astype(np.float32))  # 261 % 8 != 0
+    d_m, i_m = ops.knn(x, 7, backend="mesh", mesh=mesh)
+    d_j, i_j = ops.knn(x, 7, backend="jnp")
+    np.testing.assert_allclose(np.asarray(d_m), np.asarray(d_j), rtol=1e-6, atol=1e-7)
+    assert (np.asarray(i_m) == np.asarray(i_j)).all()
+    """)
+
+
+def test_mesh_lune_backend_matches_local():
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((8,), ("data",))
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(237, 4)).astype(np.float32))  # 237 % 8 != 0
+    d2, _ = ops.knn(x, 6, backend="jnp")
+    cd2 = d2[:, 4]
+    ea = jnp.asarray(rng.integers(0, 237, size=96).astype(np.int32))
+    eb = jnp.asarray(rng.integers(0, 237, size=96).astype(np.int32))
+    d2ab = jnp.sum((x[ea]-x[eb])**2, -1)
+    w2 = jnp.maximum(jnp.maximum(cd2[ea], cd2[eb]), d2ab)
+    got = np.asarray(ops.lune_nonempty(ea, eb, w2, x, cd2, backend="mesh", mesh=mesh))
+    want = np.asarray(ops.lune_nonempty(ea, eb, w2, x, cd2, backend="jnp"))
+    assert (got == want).all()
+    """)
+
+
+def test_sharded_boruvka_range_matches_local():
+    _run("""
+    import numpy as np, jax.numpy as jnp
+    from repro.core import boruvka
+    from repro.dist.cluster_parallel import sharded_mst_range
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((8,), ("data",))
+    rng = np.random.default_rng(2)
+    n, m, R = 120, 600, 11                      # R % 8 != 0: row padding path
+    ea = rng.integers(0, n, size=m).astype(np.int32)
+    eb = (ea + 1 + rng.integers(0, n - 1, size=m).astype(np.int32)) % n
+    ea_j, eb_j = jnp.asarray(ea), jnp.asarray(eb)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=(R, m)).astype(np.float32))
+    # ensure connectivity: add a path
+    ea_j = jnp.concatenate([ea_j, jnp.arange(n - 1, dtype=jnp.int32)])
+    eb_j = jnp.concatenate([eb_j, jnp.arange(1, n, dtype=jnp.int32)])
+    w = jnp.concatenate([w, jnp.full((R, n - 1), 3.0, jnp.float32)], axis=1)
+    got = np.asarray(sharded_mst_range(ea_j, eb_j, w, n=n, mesh=mesh))
+    want = np.asarray(boruvka.boruvka_mst_range(ea_j, eb_j, w, n=n))
+    assert (got == want).all()
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_pipeline_matches_single_device():
+    """Acceptance: on an 8-virtual-device CPU mesh, MultiHDBSCAN(mesh=...)
+    produces labels identical to the single-device path for all mpts in
+    [2, 16] on blob/moons fixtures, with matching MST weight multisets, and
+    the MST stage performs exactly one device->host transfer (ledgered, with
+    the jax transfer guard rejecting implicit syncs)."""
+    _run("""
+    import numpy as np
+    from repro import engine
+    from repro.api import MultiHDBSCAN
+    from repro.core import multi
+    from repro.launch.mesh import make_mesh_compat
+
+    rng = np.random.default_rng(0)
+    blobs = np.concatenate([
+        rng.normal((0, 0), 0.3, size=(100, 2)),
+        rng.normal((4, 0), 0.5, size=(100, 2)),
+        rng.normal((2, 4), 0.6, size=(77, 2)),    # n=277: padding path
+    ]).astype(np.float32)
+    t = rng.uniform(0, np.pi, size=(120,))
+    moons = np.concatenate([
+        np.stack([np.cos(t), np.sin(t)], 1),
+        np.stack([1.0 - np.cos(t), 0.5 - np.sin(t)], 1),
+    ]).astype(np.float32) + rng.normal(0, 0.06, size=(240, 2)).astype(np.float32)
+
+    mesh = make_mesh_compat((8,), ("data",))
+    for x in (blobs, moons):
+        single = MultiHDBSCAN(kmax=16).fit(x)
+        with engine.transfer_ledger() as led:
+            msts = multi.fit_msts(x, 16, plan=engine.resolve_plan("mesh", mesh=mesh))
+        assert engine.io.count(led, "mst") == 1, engine.io.tags(led)
+        sharded = MultiHDBSCAN(kmax=16, mesh=mesh, plan="mesh").fit(x)
+        assert sharded.plan_.sharded and sharded.plan_.n_shards == 8
+        for mpts in range(2, 17):
+            _, _, w1 = single.mst_for(mpts)
+            _, _, w2 = sharded.mst_for(mpts)
+            np.testing.assert_allclose(np.sort(w1), np.sort(w2), rtol=1e-5, atol=1e-6)
+            l1, l2 = single.labels_for(mpts), sharded.labels_for(mpts)
+            assert (l1 == l2).all(), (mpts, int((l1 != l2).sum()))
+    print("sharded parity ok")
+    """)
