@@ -82,11 +82,26 @@ def main() -> None:
         f.write("\n")
 
 
-def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0) -> dict:
+def _git_sha() -> str:
+    import subprocess
+
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
+                   warm_reps: int = 5) -> dict:
     """Stable-schema per-stage pipeline timings (written to BENCH_pipeline.json).
 
-    Each path runs twice; the per-stage rows report the WARM (second) run so
-    the trajectory tracks steady-state compute, with the cold totals kept
+    Each path runs once cold, then ``warm_reps`` warm repetitions; the warm
+    rows report the FASTEST repetition (steady-state compute — a single warm
+    sample is hostage to host scheduling noise), with the cold totals kept
     alongside (compile cost is a real deployment quantity too).
 
     Schema (keys are append-only from PR 2 onward — perf trajectory tooling
@@ -96,7 +111,14 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0) -> 
       mst_range,hierarchy,total}, baseline{knn,mst,hierarchy,total},
       cold{multi_total,baseline_total}, edges{rng,complete},
       speedup_vs_baseline
+      + (v2) provenance{git_sha,config_hash,warm_reps}
+
+    ``provenance.config_hash`` is the sha256 of the canonical config dict, so
+    the perf trajectory across commits is attributable: rows only compare
+    when both the code (git_sha) and the workload (config_hash) are known.
     """
+    import hashlib
+    import json as json_mod
     import time
 
     from benchmarks import paper_sweeps
@@ -113,16 +135,37 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0) -> 
 
     mpts = list(range(2, kmax + 1))
     (_, cold_multi) = timed(lambda: multi.multi_hdbscan(x, kmax, plan=plan))
-    (res, wall_multi) = timed(lambda: multi.multi_hdbscan(x, kmax, plan=plan))
     (_, cold_base) = timed(lambda: multi.hdbscan_baseline(x, mpts, kmax=kmax, plan=plan))
-    ((_, tb), wall_base) = timed(lambda: multi.hdbscan_baseline(x, mpts, kmax=kmax, plan=plan))
+    import gc
 
+    res, wall_multi = None, float("inf")
+    tb, wall_base = None, float("inf")
+    for _ in range(max(1, warm_reps)):
+        gc.collect()
+        (r_m, w_m) = timed(lambda: multi.multi_hdbscan(x, kmax, plan=plan))
+        if w_m < wall_multi:
+            res, wall_multi = r_m, w_m
+        gc.collect()
+        ((_, t_b), w_b) = timed(
+            lambda: multi.hdbscan_baseline(x, mpts, kmax=kmax, plan=plan)
+        )
+        if w_b < wall_base:
+            tb, wall_base = t_b, w_b
+
+    config = {
+        "n": n, "d": d, "kmax": kmax,
+        "backend": plan.backend, "plan": plan.describe(),
+    }
     stage = lambda t, k: round(t.get(k, 0.0), 4)  # noqa: E731
     return {
-        "schema_version": 1,
-        "config": {
-            "n": n, "d": d, "kmax": kmax,
-            "backend": plan.backend, "plan": plan.describe(),
+        "schema_version": 2,
+        "config": config,
+        "provenance": {
+            "git_sha": _git_sha(),
+            "config_hash": hashlib.sha256(
+                json_mod.dumps(config, sort_keys=True).encode()
+            ).hexdigest()[:16],
+            "warm_reps": warm_reps,
         },
         "multi": {
             "knn": stage(res.timings, "knn"),

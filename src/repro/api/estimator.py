@@ -116,6 +116,22 @@ class MultiHDBSCAN:
             raise ValueError(
                 f"n_samples must exceed kmax; got n={X.shape[0]}, kmax={self.kmax}"
             )
+        if not (np.issubdtype(X.dtype, np.number) or X.dtype == np.bool_):
+            raise ValueError(f"X must be numeric; got dtype {X.dtype}")
+        # NaN/inf would otherwise flow unchecked into the host WSPD
+        # fair-split tree (poisoning bbox splits) and the f32 tie-epsilon
+        # machinery (NaN never compares, silently dropping candidates) —
+        # reject here with a usable message.  Duplicated points are legal:
+        # the tie tolerance keeps every tied SBCN/MST choice, and the fused
+        # cascade falls back to the dense slot path under mass ties.
+        bad = ~np.isfinite(X)
+        if bad.any():
+            rows = np.flatnonzero(bad.any(axis=1))
+            raise ValueError(
+                f"X contains {int(bad.sum())} non-finite value(s) "
+                f"(NaN or inf) in {len(rows)} row(s), first at row "
+                f"{int(rows[0])}; clean or impute before fit()"
+            )
         # resolve the execution plan ONCE: backend + mesh placement + sizes
         self.plan_ = engine.resolve_plan(
             self.plan, backend=self.backend, mesh=self.mesh

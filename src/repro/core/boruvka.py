@@ -94,10 +94,93 @@ def boruvka_mst(ea: jax.Array, eb: jax.Array, w: jax.Array, *, n: int):
     return in_mst
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def boruvka_mst_range(ea: jax.Array, eb: jax.Array, w_range: jax.Array, *, n: int):
-    """MSTs for every mpts at once: w_range (R, m) -> in_mst (R, m) bool."""
-    return jax.vmap(lambda w: boruvka_mst(ea, eb, w, n=n))(w_range)
+def _boruvka_mst_range(ea: jax.Array, eb: jax.Array, w_range: jax.Array, *, n: int):
+    """MSTs for every mpts at once: w_range (R, m) -> in_mst (R, m) bool.
+
+    Unjitted body of ``boruvka_mst_range``.
+    ``dist.cluster_parallel.sharded_mst_range`` calls THIS inside its
+    shard_map region: nesting the jitted wrapper under shard_map miscompiles
+    the flat-scatter while_loop on multi-device CPU (wrong MSTs on every
+    shard but the first); the plain function traces inline and is correct.
+
+    Natively batched (not a vmap of ``boruvka_mst``): each row's edges are
+    pre-ranked ONCE by their lexicographic (w, edge id) order — the IEEE
+    bit pattern of a non-negative f32 is order-preserving as an int32, so
+    the ranking is one two-int-key sort, cheaper than a stable f32 argsort
+    — and the per-round scatter-min then runs on int32 dense ranks: a
+    single one-phase min instead of the f32-weight + tie-id two-phase,
+    with all R rows sharing one flat (R*n) scatter.  Rank order IS the
+    (w, edge id) key the two-phase min implements, so the chosen MSTs are
+    bit-identical to ``boruvka_mst`` (asserted by tests/test_mst.py).
+    """
+    R, m = w_range.shape
+    wf = w_range.astype(jnp.float32)
+    wf = jnp.where(wf == 0.0, jnp.float32(0.0), wf)  # -0.0 bitcast would misorder
+    w_bits = jax.lax.bitcast_convert_type(wf, jnp.int32)
+    iota_m = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (R, m))
+    _, order = jax.lax.sort((w_bits, iota_m), dimension=1, num_keys=2)
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+    rank = jnp.zeros((R, m), jnp.int32).at[rows, order].set(iota_m)
+    big = jnp.int32(m)
+    iota_n = jnp.arange(n, dtype=jnp.int32)[None, :]
+    flat_off = (jnp.arange(R, dtype=jnp.int32) * n)[:, None]
+
+    def cond(state):
+        _, _, n_comp, progressed, rounds = state
+        return jnp.any(n_comp > 1) & progressed & (rounds < 64)
+
+    def body(state):
+        comp, in_mst, _, _, rounds = state
+        ca = jnp.take(comp, ea, axis=1)                             # (R, m)
+        cb = jnp.take(comp, eb, axis=1)
+        cross = ca != cb
+        rk = jnp.where(cross, rank, big)
+        # one-phase scatter-min of ranks per (row, component), flat over R*n
+        best = (
+            jnp.full((R * n,), big, jnp.int32)
+            .at[(flat_off + ca).ravel()]
+            .min(rk.ravel())
+            .at[(flat_off + cb).ravel()]
+            .min(rk.ravel())
+            .reshape(R, n)
+        )
+        has = best < big
+        eidx = jnp.take_along_axis(order, jnp.where(has, best, 0), axis=1)
+        pa = jnp.take_along_axis(comp, ea[eidx], axis=1)
+        pb = jnp.take_along_axis(comp, eb[eidx], axis=1)
+        other = jnp.where(pa == iota_n, pb, pa)
+        parent = jnp.where(has, other, iota_n)
+        # break mutual pairs: keep the smaller id as root
+        pp = jnp.take_along_axis(parent, parent, axis=1)
+        parent = jnp.where((pp == iota_n) & (iota_n < parent), iota_n, parent)
+
+        def pj_body(p):
+            return jnp.take_along_axis(p, p, axis=1)
+
+        def pj_cond(p):
+            return jnp.any(jnp.take_along_axis(p, p, axis=1) != p)
+
+        parent = jax.lax.while_loop(pj_cond, pj_body, parent)
+        mark_idx = jnp.where(has, eidx, m)
+        in_mst = in_mst.at[rows, mark_idx].set(True, mode="drop")
+        new_comp = jnp.take_along_axis(parent, comp, axis=1)
+        n_comp = jnp.sum(new_comp == iota_n, axis=1).astype(jnp.int32)
+        return new_comp, in_mst, n_comp, jnp.any(has), rounds + 1
+
+    init = (
+        jnp.broadcast_to(iota_n, (R, n)),
+        jnp.zeros((R, m), bool),
+        jnp.full((R,), n, jnp.int32),
+        jnp.bool_(True),
+        jnp.int32(0),
+    )
+    _, in_mst, _, _, _ = jax.lax.while_loop(cond, body, init)
+    return in_mst
+
+
+boruvka_mst_range = functools.partial(jax.jit, static_argnames=("n",))(
+    _boruvka_mst_range
+)
 
 
 @jax.jit

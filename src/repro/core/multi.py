@@ -28,9 +28,11 @@ so benchmark ratios isolate exactly the graph/MST work the paper optimizes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -110,6 +112,32 @@ class MultiDensityResult:
     timings: dict[str, float]
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def _mst_stage_local(d2_pad, cd2_dev, ea, eb, row_idx, *, n: int):
+    """Single-device MST stage as ONE program: reweight + batched Borůvka +
+    row compaction, no intermediate materialization between steps."""
+    w_range = mrd_mod.reweight_all_mpts(d2_pad, cd2_dev, ea, eb)
+    w_sel = w_range[row_idx]
+    in_mst = boruvka.boruvka_mst_range(ea, eb, w_sel, n=n)
+    return _compact_mst_rows(in_mst, ea, eb, w_sel, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _compact_mst_rows(in_mst, ea, eb, w_sel, *, n: int):
+    """(R, m) MST mask -> (R, n-1) ascending edge-id compaction + counts."""
+    R, m = in_mst.shape
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+    dst = jnp.where(in_mst, jnp.cumsum(in_mst, axis=1) - 1, n - 1)
+    sel = (
+        jnp.zeros((R, n - 1), jnp.int32)
+        .at[rows, dst]
+        .set(jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (R, m)), mode="drop")
+    )
+    counts = jnp.sum(in_mst, axis=1)
+    mst_w = jnp.sqrt(jnp.take_along_axis(w_sel, sel, axis=1))
+    return ea[sel], eb[sel], mst_w, counts
+
+
 def fit_msts(
     x,
     kmax: int,
@@ -159,30 +187,51 @@ def fit_msts(
     )
     timings["rng_build"] = time.monotonic() - t0
 
-    ea = jnp.asarray(graph.edges[:, 0], jnp.int32)
-    eb = jnp.asarray(graph.edges[:, 1], jnp.int32)
+    # quantize the edge count so the Borůvka/reweight programs compile one
+    # shape per scale bucket instead of one per dataset; padded edges are
+    # (0, 0) with +inf weight — same component, never cross, never chosen
+    m_real = len(graph.edges)
+    m_pad = max(4096, -(-m_real // 4096) * 4096)
+    ea = jnp.zeros((m_pad,), jnp.int32).at[:m_real].set(
+        jnp.asarray(graph.edges[:, 0], jnp.int32)
+    )
+    eb = jnp.zeros((m_pad,), jnp.int32).at[:m_real].set(
+        jnp.asarray(graph.edges[:, 1], jnp.int32)
+    )
+    d2_pad = jnp.full((m_pad,), jnp.inf, jnp.float32).at[:m_real].set(
+        jnp.asarray(graph.d2)
+    )
 
     t0 = time.monotonic()
-    w_range = mrd_mod.reweight_all_mpts(jnp.asarray(graph.d2), cd2_dev, ea, eb)
-    w_sel = w_range[jnp.asarray([m - 1 for m in mpts_list])]
-    in_mst = plan.mst_range(ea, eb, w_sel, n=n)
-
-    # compact each row's boolean mask to (n-1) ascending edge indices ON
-    # DEVICE (stable argsort puts the True positions first, in column order),
-    # then materialize everything in the MST stage's one host sync.
-    sel_dev = jnp.argsort(jnp.logical_not(in_mst), axis=1, stable=True)[:, : n - 1]
-    counts_dev = jnp.sum(in_mst, axis=1)
-    mst_ea_dev = ea[sel_dev]
-    mst_eb_dev = eb[sel_dev]
-    mst_w_dev = jnp.sqrt(jnp.take_along_axis(w_sel, sel_dev, axis=1))
-    mst_ea, mst_eb, mst_w, counts = engine.to_host(
-        (mst_ea_dev, mst_eb_dev, mst_w_dev, counts_dev), "mst"
-    )
+    row_idx = jnp.asarray([m - 1 for m in mpts_list])
+    if plan.sharded:
+        w_range = mrd_mod.reweight_all_mpts(d2_pad, cd2_dev, ea, eb)
+        w_sel = w_range[row_idx]
+        in_mst = plan.mst_range(ea, eb, w_sel, n=n)
+        mst_dev = _compact_mst_rows(in_mst, ea, eb, w_sel, n=n)
+    else:
+        # single device: reweight + Borůvka + row compaction fused into one
+        # program (each row's mask compacts to (n-1) ascending edge ids via
+        # cumsum-positioned scatters), ending at the stage's one host sync
+        mst_dev = _mst_stage_local(d2_pad, cd2_dev, ea, eb, row_idx, n=n)
+    mst_ea, mst_eb, mst_w, counts = engine.to_host(mst_dev, "mst")
     if not np.all(counts == n - 1):
-        bad = [mpts_list[i] for i in np.flatnonzero(counts != n - 1)]
+        # Borůvka exits via progressed=False on a disconnected edge list and
+        # returns < n-1 edges per row; consuming those rows downstream would
+        # feed garbage into linkage.  The RNG^kmax provably contains every
+        # per-mpts MST (paper Cor. 1), so disconnection here always means an
+        # upstream candidate/filter bug (or a hand-fed broken edge list) —
+        # fail loudly instead.
+        bad = {
+            mpts_list[i]: int(counts[i])
+            for i in np.flatnonzero(counts != n - 1)
+        }
         raise RuntimeError(
-            f"MST incomplete for mpts={bad}: graph variant {variant!r} is "
-            f"disconnected at those densities"
+            f"MST incomplete: graph variant {variant!r} with "
+            f"{m_real} edges is disconnected — got "
+            f"{{mpts: n_tree_edges}} = {bad}, need {n - 1} edges per mpts. "
+            f"The RNG^kmax must contain every MST, so this indicates an "
+            f"upstream candidate-generation or filter bug."
         )
     timings["mst_range"] = time.monotonic() - t0
 

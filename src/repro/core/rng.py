@@ -11,12 +11,27 @@ Variants (paper's naming):
 
 All predicates run in squared space (see core.mrd).
 
+Two device data-planes build the filtered graph:
+
+  * the FUSED CASCADE (default): bounded per-row candidate emission
+    (``sbcn.cascade_candidates`` — packed int32 keys, single-key dedup
+    sort), then the staged ``plan.edge_cascade`` programs: a ``stage1_k``
+    lune prefilter kills ~90% of candidates before the full kmax-list
+    check + core-distance certificate run on the survivors.  Staging and
+    bounded emission are exact (see kernels.fused_cascade / core.sbcn);
+    when emission detects a per-row tie overflow (mass-duplicate inputs)
+    the build transparently falls back to
+  * the SLOT-ARRAY path (``sbcn_candidates`` + ``filter_cascade_device``):
+    dense per-cell slots, scatter compaction, unstaged kNN-lune check.
+    Retained as the golden reference (tests pin the fused path's edge sets
+    against it), as the ``backend="ref"`` path, and for n too large to pack
+    (lo, hi) into int32 keys.
+
 Dataflow: the WSPD tree and pair recursion are host control-plane (numpy);
-candidate generation (core.sbcn), the filter cascade, and edge weights are
-device-resident jax programs over padded/masked arrays.  The only
-device->host sync here is the final graph compaction (``engine.to_host``
-tag ``graph``; the exact variant adds one ``lune_exact`` sync for its
-unresolved-edge subset).
+everything else is device-resident jax programs over padded/masked arrays.
+Host syncs are the named ledger points only: ``candidate_count`` /
+``stage1_count`` (scalars sizing the static compactions), ``graph`` (the
+one bulk materialization), and ``lune_exact`` for the exact variant.
 """
 
 from __future__ import annotations
@@ -34,6 +49,13 @@ from . import sbcn as sbcn_mod
 from . import wspd as wspd_mod
 
 VARIANTS = ("rng_ss", "rng_star", "rng")
+
+# the fused path packs (lo, hi) as lo * n + hi into int32 keys
+_PACK_LIMIT = 46340
+
+
+def _pow2_ceil(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -214,6 +236,175 @@ def filter_edges(
     return edges[keep], stats
 
 
+def _empty_graph(variant: str, n: int, n_pairs: int) -> RngGraph:
+    return RngGraph(
+        edges=np.zeros((0, 2), np.int64),
+        d2=np.zeros((0,), np.float32),
+        w2_kmax=np.zeros((0,), np.float32),
+        variant=variant,
+        n_points=n,
+        stats={"m_candidates": 0, "n_wspd_pairs": n_pairs, "m_edges": 0},
+    )
+
+
+@jax.jit
+def _unpack_keys(ks, n_pack):
+    """Sorted packed keys -> (valid, first-occurrence, lo, hi)."""
+    valid = ks != sbcn_mod._SENTINEL
+    first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    safe = jnp.where(valid, ks, 0)
+    return valid, first, (safe // n_pack).astype(jnp.int32), (safe % n_pack).astype(jnp.int32)
+
+
+@jax.jit
+def _split_survivors(valid, first, killed1, cert1):
+    """Stage-1 verdicts -> (certified survivors, open survivors, counts)."""
+    surv = valid & first & ~killed1
+    sc = surv & cert1
+    so = surv & ~cert1
+    return sc, so, jnp.sum(sc), jnp.sum(so)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _compact_idx(mask, *, cap: int):
+    return jnp.nonzero(mask, size=cap, fill_value=0)[0]
+
+
+def _build_fused(
+    x, cd2, knn_d2, knn_idx, tree, pu, pv, variant, plan
+) -> RngGraph | None:
+    """Fused-cascade RNG build; returns None on tie overflow (caller falls
+    back to the slot-array path, which keeps ALL tied SBCN minima)."""
+    n = x.shape[0]
+    cd2k = cd2[:, -1]
+    keys_sorted, n_real_d, n_unique_d, n_mutual_d, n_overflow_d = (
+        sbcn_mod.cascade_candidates(
+            x,
+            cd2k,
+            tree.perm,
+            tree.start[pu],
+            tree.end[pu] - tree.start[pu],
+            tree.start[pv],
+            tree.end[pv] - tree.start[pv],
+            tie_cap=plan.cascade_tie_cap,
+            tier_chunk_elems=plan.tier_chunk_elems,
+        )
+    )
+    # ONE scalar sync sizes the stage-1 buffer and reports the exact tie
+    # overflow verdict (no silent edge drops — overflow means fall back)
+    n_real, n_unique, n_mutual, n_overflow = (
+        int(v)
+        for v in engine.to_host(
+            (n_real_d, n_unique_d, n_mutual_d, n_overflow_d), "candidate_count"
+        )
+    )
+    if n_overflow:
+        return None
+    if n_real == 0:
+        return _empty_graph(variant, n, int(len(pu)))
+
+    cap = min(_pow2_ceil(n_real), keys_sorted.shape[0])
+    ks = keys_sorted[:cap]
+    n_pack = jnp.int32(n)
+
+    stats = {
+        "m_candidates": n_unique,
+        "n_wspd_pairs": int(len(pu)),
+        "m_candidate_slots": n_real,
+        "m_mutual_slots": n_mutual,
+        "path": "fused",
+    }
+
+    # stage 1: cheap prefilter over each endpoint's k1 nearest — its
+    # removals are a subset of the full check's, so survivors-only stage 2
+    # gives the identical final verdict for a fraction of the work.  The
+    # core-distance certificate splits the survivors further: a certified
+    # edge has w == max(cd(a), cd(b)) and every lune competitor c satisfies
+    # mrd(a,c) >= cd(a) and mrd(b,c) >= cd(b) (max is exact in f32), so
+    # nothing can ever lie strictly inside its lune — certified survivors
+    # skip the full check entirely.
+    k_full = knn_idx.shape[1]
+    k1 = min(plan.cascade_stage1_k, k_full)
+    if plan.backend in ("pallas", "pallas_interpret"):
+        valid, first, lo, hi = _unpack_keys(ks, n_pack)
+        killed1, cert1, d2_1, w2_1 = plan.edge_cascade(
+            x, cd2k, knn_idx, knn_d2, lo, hi, valid, k_check=k1
+        )
+        surv_cert, surv_open, nc_d, no_d = _split_survivors(
+            valid, first, killed1, cert1
+        )
+    else:
+        # jnp backends: the whole stage-1 block is one program
+        from ..kernels import fused_cascade as fc
+
+        lo, hi, d2_1, w2_1, surv_cert, surv_open, nc_d, no_d = fc.stage1_packed(
+            x, cd2k, knn_idx, knn_d2, ks, n_pack,
+            k_check=k1, chunk=plan.cascade_chunk,
+        )
+    n_cert, n_open = (
+        int(v) for v in engine.to_host((nc_d, no_d), "stage1_count")
+    )
+    if n_cert + n_open == 0:
+        return _empty_graph(variant, n, int(len(pu)))
+
+    q = 8192  # survivor caps quantized to coarse blocks: few programs, <12% pad
+    parts_dev = []
+    if n_cert:
+        capc = min(_pow2_ceil(n_cert), -(-n_cert // q) * q)
+        posc = _compact_idx(surv_cert, cap=capc)
+        validc = jnp.arange(capc) < n_cert
+        keepc = validc  # certified => provably in the exact RNG
+        parts_dev.append(
+            (lo[posc], hi[posc], keepc, validc, d2_1[posc], w2_1[posc])
+        )
+    if n_open:
+        capo = min(_pow2_ceil(n_open), -(-n_open // q) * q)
+        poso = _compact_idx(surv_open, cap=capo)
+        valido = jnp.arange(capo) < n_open
+        killed2, _, d2_2, w2_2 = plan.edge_cascade(
+            x, cd2k, knn_idx, knn_d2, lo[poso], hi[poso], valido,
+            k_check=k_full,
+        )
+        parts_dev.append(
+            (lo[poso], hi[poso], valido & ~killed2, jnp.zeros_like(valido),
+             d2_2, w2_2)
+        )
+
+    parts = engine.to_host(parts_dev, "graph")
+    lo_h = np.concatenate([p[0] for p in parts])
+    hi_h = np.concatenate([p[1] for p in parts])
+    keep = np.concatenate([p[2] for p in parts])
+    certified = np.concatenate([p[3] for p in parts])
+    d2_h = np.concatenate([p[4] for p in parts])
+    w2_h = np.concatenate([p[5] for p in parts])
+    # restore the slot path's sorted-(lo, hi) edge order: downstream MST
+    # tie-breaks are by edge id, so order parity keeps the paths bit-equal
+    order = np.lexsort((hi_h, lo_h))
+    lo_h, hi_h, keep, certified, d2_h, w2_h = (
+        v[order] for v in (lo_h, hi_h, keep, certified, d2_h, w2_h)
+    )
+    stats["m_removed_knn"] = n_unique - int(keep.sum())
+    stats["m_certified"] = int((keep & certified).sum())
+
+    if variant == "rng":
+        keep = _exact_lune_pass(
+            keep, certified, lo_h, hi_h, w2_h, x, cd2k, plan, stats
+        )
+
+    edges = np.stack(
+        [lo_h[keep].astype(np.int64), hi_h[keep].astype(np.int64)], axis=1
+    )
+    stats["m_edges"] = int(len(edges))
+    return RngGraph(
+        edges=edges,
+        d2=d2_h[keep],
+        w2_kmax=w2_h[keep],
+        variant=variant,
+        n_points=n,
+        stats=stats,
+    )
+
+
 def build_rng_graph(
     x: jax.Array,
     knn_d2: jax.Array,
@@ -251,7 +442,15 @@ def build_rng_graph(
     )
     pu, pv = wspd_mod.wspd_pairs(tree, s=separation)
 
-    # -- device data plane: candidates + filter cascade, padded/masked ------
+    # -- fused cascade (default): bounded emission + staged fused filter ----
+    if variant != "rng_ss" and plan.backend != "ref" and n <= _PACK_LIMIT:
+        g = _build_fused(x, cd2, knn_d2, knn_idx, tree, pu, pv, variant, plan)
+        if g is not None:
+            return g
+        # per-row tie overflow (mass duplicates): the slot path below keeps
+        # every tied SBCN minimum, so no candidate is lost
+
+    # -- slot-array data plane: dense candidates + unstaged filter cascade --
     lo_s, hi_s, keep_s = sbcn_mod.sbcn_candidates(
         x,
         cd2[:, -1],

@@ -284,6 +284,303 @@ def sbcn_candidates(
     return _dedup_sorted(lo_c, hi_c)
 
 
+# ---------------------------------------------------------------------------
+# Fused-cascade emission: bounded per-row candidate keys (PR 3)
+# ---------------------------------------------------------------------------
+#
+# The slot-array path above emits one slot per TILE CELL (|A|x|B| per pair —
+# ~8M slots for ~1M candidates at n=4000) and pays for it downstream: a
+# 2-array scatter compaction over every cell plus a variadic 2-key dedup
+# sort.  The cascade path emits at most ``tie_cap`` packed int32 keys per
+# (pair, A-row) — an SBCN edge must be its row's minimum, so ``tie_cap``
+# bounds real emissions except under mass ties — and detects the tie
+# overflow EXACTLY so the caller can fall back to the dense slot path
+# (semantics preserved under heavy duplicates).  Keys pack (lo, hi) as
+# ``lo * n + hi``; the single-key sort dedups ~7x faster than the variadic
+# sort and doubles as the compaction (sentinels sort to the end).
+
+_SMALL_AMAX = 4          # bucketed-tier path bounds (pow2-exact tiers)
+_SMALL_BMAX = 8
+_TIER_CHUNK_ELEMS = 1 << 17   # fixed cells per tier chunk => shape-stable programs
+_ROWPATH_PAIR_BLOCK = 32      # pairs per row-path dispatch (fixed)
+
+
+def _pack_keys(lo, hi, n_pack, found):
+    return jnp.where(found, lo * n_pack + hi, _SENTINEL)
+
+
+def _emit_from_mask(mask, a_idx, b_idx, n_pack, tie_cap: int):
+    """Per-row top-``tie_cap`` emission from an SBCN mutual mask.
+
+    mask (P, A, B) bool; a_idx (P, A) / b_idx (P, B) int32 point ids (-1 pad).
+    Returns (keys (P*A*tie_cap,), counters (2,)): packed candidate keys and
+    [n_mutual_slots, n_rows_overflowing].  Selection keeps the first
+    ``tie_cap`` set columns per row — identical to the dense mask whenever no
+    row has more than ``tie_cap`` tied minima (counters[1] reports exactly
+    when that fails, so callers can fall back without losing edges).
+    """
+    P, A, B = mask.shape
+    if B <= max(tie_cap, 4):
+        # narrow tiers: dense emission (every cell is a slot) costs at most
+        # one extra slot per row and skips the selection passes entirely;
+        # overflow is impossible because nothing is dropped
+        lo = jnp.minimum(a_idx[:, :, None], b_idx[:, None, :])
+        hi = jnp.maximum(a_idx[:, :, None], b_idx[:, None, :])
+        keys = _pack_keys(lo, hi, n_pack, mask)
+        counters = jnp.stack([jnp.sum(mask), jnp.int32(0)]).astype(jnp.int32)
+        return keys.reshape(P * A * B), counters
+    iota_b = jnp.arange(B, dtype=jnp.int32)
+    m = mask
+    keys = []
+    for _ in range(min(tie_cap, B)):  # a row has at most B set columns
+        j = jnp.argmax(m, axis=2)                                 # (P, A)
+        found = jnp.take_along_axis(m, j[..., None], axis=2)[..., 0]
+        gb = jnp.take_along_axis(b_idx, j, axis=1)                # (P, A)
+        lo = jnp.minimum(a_idx, gb)
+        hi = jnp.maximum(a_idx, gb)
+        keys.append(_pack_keys(lo, hi, n_pack, found))
+        m = m & (iota_b[None, None, :] != j[..., None])
+    counts = jnp.sum(mask, axis=2)
+    counters = jnp.stack(
+        [jnp.sum(counts), jnp.sum(counts > tie_cap)]
+    ).astype(jnp.int32)
+    return jnp.stack(keys, axis=-1).reshape(P * A * len(keys)), counters
+
+
+@functools.partial(jax.jit, static_argnames=("tie_cap",))
+def _tier_emit(x, cd2k, a_idx, b_idx, n_pack, *, tie_cap: int):
+    """One fixed-shape bucketed-tier chunk -> bounded packed keys + counters."""
+    mutual = _mutual_mask(x, cd2k, a_idx, b_idx)
+    return _emit_from_mask(mutual, a_idx, b_idx, n_pack, tie_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("tie_cap",))
+def _rowpath_emit(x, cd2k, a_chunks, b_idx, n_pack, *, tie_cap: int):
+    """Row-chunked SBCN emission for a block of same-shape oversized pairs.
+
+    a_chunks (Pb, nc, rc) int32 padded -1; b_idx (Pb, nb) padded -1.  Same
+    two-pass min-reduction as ``_sbcn_large`` (bit-identical mrd tiles and
+    tie tolerance), but emits bounded per-row keys instead of the dense
+    (na, nb) mask.  Peak memory is O(rc * nb) per pair regardless of na.
+    """
+    eps = jnp.float32(_EPS)
+
+    def one_pair(args):
+        ac_all, bj = args                                # (nc, rc), (nb,)
+        xb = x[bj].astype(jnp.float32)
+        cdb = cd2k[bj]
+        bnorm = jnp.sum(xb * xb, -1)
+        b_bad = bj < 0
+
+        def mrd_chunk(ac):
+            xa = x[ac].astype(jnp.float32)
+            anorm = jnp.sum(xa * xa, -1)
+            d2 = anorm[:, None] + bnorm[None, :] - 2.0 * xa @ xb.T
+            m = jnp.maximum(
+                jnp.maximum(cd2k[ac][:, None], cdb[None, :]), jnp.maximum(d2, 0.0)
+            )
+            m = jnp.where((ac < 0)[:, None] | b_bad[None, :], jnp.inf, m)
+            tol = eps * (anorm[:, None] + bnorm[None, :])
+            return m, tol
+
+        def emit(m, tol, col_min, ac):
+            row_min = jnp.min(m, axis=1, keepdims=True)
+            mask = (m <= row_min + tol) & (m <= col_min + tol) & jnp.isfinite(m)
+            return _emit_from_mask(mask[None], ac[None], bj[None], n_pack, tie_cap)
+
+        if ac_all.shape[0] == 1:
+            # single row chunk: the tile IS the whole pair — one pass
+            m, tol = mrd_chunk(ac_all[0])
+            return emit(m, tol, jnp.min(m, axis=0, keepdims=True), ac_all[0])
+
+        def pass1(ac):
+            return jnp.min(mrd_chunk(ac)[0], axis=0)
+
+        col_min = jnp.min(jax.lax.map(pass1, ac_all), axis=0)[None, :]
+
+        def pass2(ac):
+            m, tol = mrd_chunk(ac)
+            return emit(m, tol, col_min, ac)
+
+        keys, counters = jax.lax.map(pass2, ac_all)
+        return keys.reshape(-1), jnp.sum(counters, axis=0)
+
+    keys, counters = jax.lax.map(one_pair, (a_chunks, b_idx))
+    return keys.reshape(-1), jnp.sum(counters, axis=0)
+
+
+@jax.jit
+def _sort_dedup_stats(keys):
+    """Sort packed keys (sentinels last); return (sorted, n_real, n_unique)."""
+    ks = jnp.sort(keys)
+    valid = ks != _SENTINEL
+    first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    return ks, jnp.sum(valid), jnp.sum(valid & first)
+
+
+def _pow2_ceil(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def _pow2_ceil_np(v: np.ndarray) -> np.ndarray:
+    """Vectorized pow2 round-up (exact: log2 of small ints is exact in f64)."""
+    return np.left_shift(
+        np.int64(1),
+        np.ceil(np.log2(np.maximum(v, 1))).astype(np.int64),
+    )
+
+
+def cascade_candidates(
+    x: jax.Array,
+    cd2_kmax: jax.Array,
+    perm: np.ndarray,
+    a_start: np.ndarray,
+    a_len: np.ndarray,
+    b_start: np.ndarray,
+    b_len: np.ndarray,
+    *,
+    tie_cap: int = 2,
+    tier_chunk_elems: int = _TIER_CHUNK_ELEMS,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Bounded-emission SBCN candidates as sorted packed keys, device-resident.
+
+    Returns device values ``(keys_sorted, n_real, n_unique, n_mutual,
+    n_overflow)``.  ``keys_sorted`` is pow2-padded with sentinels;
+    ``n_overflow > 0`` means some (pair, row) had more than ``tie_cap`` tied
+    SBCN minima and the caller MUST fall back to ``sbcn_candidates`` (the
+    dense slot path) — emission would otherwise drop tied edges.  No host
+    sync happens here; the caller materializes the four scalars at its own
+    ledger point.
+
+    Requires n <= 46340 (packed ``lo * n + hi`` must fit int32); callers
+    gate on that before choosing this path.
+    """
+    from .. import engine
+
+    perm = perm.astype(np.int32)  # halves the gather traffic below
+    swap = a_len > b_len
+    a_start, b_start = np.where(swap, b_start, a_start), np.where(swap, a_start, b_start)
+    a_len, b_len = np.where(swap, b_len, a_len), np.where(swap, a_len, b_len)
+
+    n_pack = jnp.int32(x.shape[0])
+    key_parts: list[jax.Array] = []
+    counter_parts: list[jax.Array] = []
+
+    # singleton-singleton pairs ARE their own SBCN edge: emit on the host
+    # control plane (pure numpy), zero device compute
+    ss = (a_len == 1) & (b_len == 1)
+    n_ss = int(ss.sum())
+    if n_ss:
+        pa = perm[a_start[ss]]
+        pb = perm[b_start[ss]]
+        ss_keys = (
+            np.minimum(pa, pb).astype(np.int64) * int(x.shape[0])
+            + np.maximum(pa, pb)
+        )
+        key_parts.append(jnp.asarray(ss_keys.astype(np.int32)))
+
+    rest = np.nonzero(~ss)[0]
+    if len(rest):
+        al, bl = a_len[rest], b_len[rest]
+        small = (al <= _SMALL_AMAX) & (bl <= _SMALL_BMAX)
+
+        # -- small tiers: pow2-exact (amax, bmax), FIXED chunk per tier ------
+        ka = _pow2_ceil_np(al)
+        kb = _pow2_ceil_np(bl)
+        for key in np.unique(ka[small] * 16 + kb[small]) if small.any() else []:
+            kaa, kbb = int(key) // 16, int(key) % 16
+            sel = rest[small & (ka == kaa) & (kb == kbb)]
+            P = len(sel)
+            chunk = max(8, tier_chunk_elems // (kaa * kbb))
+            P_pad = -(-P // chunk) * chunk
+            a_pad = _padded_gather(perm, a_start[sel], a_len[sel], kaa, P_pad)
+            b_pad = _padded_gather(perm, b_start[sel], b_len[sel], kbb, P_pad)
+            emit = engine.plan.cached_program(
+                ("tier_emit", kaa, kbb, chunk, tie_cap, x.shape[1]),
+                lambda: functools.partial(_tier_emit, tie_cap=tie_cap),
+            )
+            for c0 in range(0, P_pad, chunk):
+                keys_c, counters_c = emit(
+                    x, cd2_kmax,
+                    jnp.asarray(a_pad[c0 : c0 + chunk]),
+                    jnp.asarray(b_pad[c0 : c0 + chunk]),
+                    n_pack,
+                )
+                key_parts.append(keys_c)
+                counter_parts.append(counters_c)
+
+        # -- row path: everything larger, grouped by padded shape -----------
+        rp = rest[~small]
+        if len(rp):
+            na, nb = a_len[rp], b_len[rp]
+            # pow2 ladders (min row chunk 32, min b width 64): a handful of
+            # shape-stable programs, padded area within ~2x of intrinsic
+            rc = np.minimum(256, np.maximum(32, _pow2_ceil_np(na)))
+            nc = _pow2_ceil_np(-(-na // rc))
+            nbp = np.maximum(64, _pow2_ceil_np(nb))
+            shape_key = rc * (1 << 40) + nc * (1 << 20) + nbp
+            for skey in np.unique(shape_key):
+                sel = rp[shape_key == skey]
+                rcc = int(rc[shape_key == skey][0])
+                ncc = int(nc[shape_key == skey][0])
+                nbb = int(nbp[shape_key == skey][0])
+                # pair block bounded by a cell budget: huge tiles dispatch in
+                # small blocks so a lone oversized pair never pays for a full
+                # block of padding
+                Pb = int(
+                    min(_ROWPATH_PAIR_BLOCK, max(2, (1 << 21) // (ncc * rcc * nbb)))
+                )
+                emit = engine.plan.cached_program(
+                    ("rowpath_emit", rcc, ncc, nbb, Pb, tie_cap, x.shape[1]),
+                    lambda: functools.partial(_rowpath_emit, tie_cap=tie_cap),
+                )
+                for g0 in range(0, len(sel), Pb):
+                    grp = sel[g0 : g0 + Pb]
+                    a_blk = _padded_gather(
+                        perm, a_start[grp], a_len[grp], ncc * rcc, Pb
+                    ).reshape(Pb, ncc, rcc)
+                    b_blk = _padded_gather(perm, b_start[grp], b_len[grp], nbb, Pb)
+                    keys_c, counters_c = emit(
+                        x, cd2_kmax, jnp.asarray(a_blk), jnp.asarray(b_blk), n_pack
+                    )
+                    key_parts.append(keys_c)
+                    counter_parts.append(counters_c)
+
+    if not key_parts:
+        z = jnp.full((8,), _SENTINEL, jnp.int32)
+        zero = jnp.int32(0)
+        return z, zero, zero, zero, zero
+
+    keys = jnp.concatenate(key_parts)
+    # quantize the sort length to coarse blocks: ~1 sort program per scale,
+    # <=12.5% padding (a full pow2 round-up can nearly double the sort)
+    q = 1 << 18
+    total = min(_pow2_ceil(keys.shape[0]), -(-keys.shape[0] // q) * q)
+    if total != keys.shape[0]:
+        keys = jnp.concatenate(
+            [keys, jnp.full((total - keys.shape[0],), _SENTINEL, jnp.int32)]
+        )
+    keys_sorted, n_real, n_unique = _sort_dedup_stats(keys)
+    if counter_parts:
+        counters = jnp.sum(jnp.stack(counter_parts), axis=0)
+    else:
+        counters = jnp.zeros((2,), jnp.int32)
+    n_mutual = counters[0] + jnp.int32(n_ss)
+    return keys_sorted, n_real, n_unique, n_mutual, counters[1]
+
+
+def _padded_gather(perm, starts, lens, width: int, rows: int):
+    """(rows, width) int32 point-id matrix from (start, len) perm ranges,
+    padded with -1 (short ranges AND missing rows)."""
+    out = np.full((rows, width), -1, np.int32)
+    k = len(starts)
+    if k:
+        r = starts[:, None] + np.arange(width)[None, :]
+        v = np.arange(width)[None, :] < lens[:, None]
+        out[:k] = np.where(v, perm[np.minimum(r, len(perm) - 1)], -1)
+    return out
+
+
 def sbcn_edges(
     x: jax.Array,
     cd2_kmax: jax.Array,

@@ -211,6 +211,8 @@ def sharded_mst_range(ea, eb, w_range, *, n: int, mesh, axis: str = "data"):
         check_rep=False,
     )
     def f(ea_l, eb_l, w_l):
-        return boruvka.boruvka_mst_range(ea_l, eb_l, w_l, n=n)
+        # the UNJITTED body: an inner jit nested under shard_map miscompiles
+        # the flat-scatter while_loop on multi-device CPU (see core.boruvka)
+        return boruvka._boruvka_mst_range(ea_l, eb_l, w_l, n=n)
 
     return f(ea_r, eb_r, w_s)[:R]

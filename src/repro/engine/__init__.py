@@ -14,7 +14,11 @@ pipeline goes through ``to_host``, which a test ledger can count (and, under
 sync into an error).
 """
 
+from . import io, plan
 from .io import to_host, transfer_ledger
-from .plan import Plan, resolve_plan
+from .plan import Plan, cached_program, resolve_plan
 
-__all__ = ["Plan", "resolve_plan", "to_host", "transfer_ledger"]
+__all__ = [
+    "Plan", "cached_program", "io", "plan", "resolve_plan", "to_host",
+    "transfer_ledger",
+]

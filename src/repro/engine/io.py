@@ -5,12 +5,16 @@ that bulk device->host syncs happen ONLY at named materialization points:
 
   ``knn``             — the kNN stage's host view (stored on the result object
                         and consumed by the WSPD control plane).
-  ``candidate_slots`` — ONE scalar: the real (non-sentinel) SBCN slot count,
-                        which sizes the device-side slot compaction so the
-                        dedup sort runs on ~m entries, not the full tile area.
-  ``candidate_count`` — ONE scalar: the unique SBCN candidate count, which
-                        sizes the static device-side compaction buffer the
-                        filter cascade runs over.
+  ``candidate_count`` — a handful of scalars sizing the static candidate
+                        buffers: on the fused-cascade path the (slot, unique,
+                        mutual, tie-overflow) counts in ONE sync; on the
+                        slot-array path the unique candidate count.
+  ``candidate_slots`` — slot-array path only: ONE scalar, the real
+                        (non-sentinel) SBCN slot count sizing the scatter
+                        compaction ahead of the dedup sort.
+  ``stage1_count``    — fused path only: the (certified, open) stage-1
+                        survivor counts in ONE sync, sizing the stage-2
+                        compactions.
   ``graph``           — RNG^kmax filter-verdict + edge compaction.
   ``lune_exact``      — variant="rng" only: the unresolved-edge subset for the
                         exact lune scan.

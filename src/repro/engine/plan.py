@@ -12,9 +12,50 @@ path on a laptop (1-device mesh, or no ``data`` axis) and shards on a pod.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import threading
+from typing import Any, Callable
 
 PLAN_REQUESTS = ("auto", "single", "mesh")
+
+# ---------------------------------------------------------------------------
+# Persistent program cache
+# ---------------------------------------------------------------------------
+#
+# The PR-2 pipeline compiled one tile program per (dataset-dependent!) chunk
+# shape: the SBCN tier chunks were rounded to the pow2 of each tier's pair
+# COUNT and every oversized WSPD pair compiled its own `_sbcn_large` at its
+# exact (na, nb) — ~3x more programs than tiers, and none reusable across
+# datasets.  Every dispatch family now quantizes its shapes to a fixed
+# bucket ladder and registers the program builder here, keyed by
+# (family, tier dims, k, d, ...): the first call per key builds (and jits)
+# the program, every later call — across stages, Plan instances, and
+# datasets — reuses it.  Cold compile cost becomes O(#buckets), not
+# O(#datasets x #tiers).
+
+_PROGRAM_CACHE: dict[tuple, Callable] = {}
+_PROGRAM_CACHE_LOCK = threading.Lock()
+
+
+def cached_program(key: tuple, build: Callable[[], Callable]) -> Callable:
+    """Return the program registered under ``key``, building it on first use.
+
+    ``key`` must capture everything that determines the compiled program
+    besides operand shapes (family name, tier dims, candidate count k,
+    point dimensionality d, chunking) — callers guarantee the operand
+    shapes are a pure function of the key.
+    """
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is None:
+        with _PROGRAM_CACHE_LOCK:
+            fn = _PROGRAM_CACHE.get(key)
+            if fn is None:
+                fn = _PROGRAM_CACHE[key] = build()
+    return fn
+
+
+def program_cache_info() -> list[tuple]:
+    """Registered program keys (introspection / tests)."""
+    return sorted(_PROGRAM_CACHE, key=repr)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +82,12 @@ class Plan:
     sbcn_tile_elems: int = 1 << 22  # elements per SBCN tier-program chunk
     sbcn_pair_cap: int = 1 << 18    # max padded |A|*|B| on the bucketed path
     sbcn_row_chunk: int = 2048      # row chunk for oversized WSPD pairs
+    # -- fused cascade (PR 3) ----------------------------------------------
+    cascade_tie_cap: int = 3    # bounded per-row SBCN emissions before fallback
+    cascade_stage1_k: int = 2   # neighbours in the cheap stage-1 lune prefilter
+    cascade_chunk: int = 65536  # edges per fused-cascade program chunk
+    cascade_block_e: int = 256  # pallas edge-cascade tile
+    tier_chunk_elems: int = 1 << 18  # fixed cells per SBCN emission chunk
 
     # -- placement ---------------------------------------------------------
 
@@ -84,6 +131,26 @@ class Plan:
             mesh_axis=self.axis,
             block_e=self.lune_block_e,
             block_c=self.lune_block_c,
+        )
+
+    def edge_cascade(self, x, cd2k, knn_idx, knn_d2, ea, eb, valid, *, k_check: int):
+        """Fused d2 + w2 + kNN-lune verdict + certificate over an edge list.
+
+        Stage placement: local compute on every plan (the mesh path shards
+        points for the kNN/exact-lune/MST stages; the cascade runs on the
+        replicated candidate set, like the rest of the RNG build).  Compile
+        caching lives in the jitted cascade programs themselves (keyed by
+        k_check + operand shapes); the ``cached_program`` registry covers
+        the dispatch families that build per-tier callables (core.sbcn).
+        """
+        from ..kernels import fused_cascade
+
+        return fused_cascade.edge_cascade(
+            x, cd2k, knn_idx, knn_d2, ea, eb, valid,
+            k_check=k_check,
+            backend=self.backend,
+            chunk=self.cascade_chunk,
+            block_e=self.cascade_block_e,
         )
 
     def mst_range(self, ea, eb, w_range, *, n: int):

@@ -4,8 +4,12 @@ Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jitted
 dispatching wrappers), ref.py (pure-jnp oracles used by tests).
 """
 
-from . import ops, ref
+from . import fused_cascade, ops, ref
+from .fused_cascade import edge_cascade
 from .lune_filter import lune_filter
 from .pairwise_topk import pairwise_topk
 
-__all__ = ["ops", "ref", "lune_filter", "pairwise_topk"]
+__all__ = [
+    "edge_cascade", "fused_cascade", "lune_filter", "ops", "pairwise_topk",
+    "ref",
+]

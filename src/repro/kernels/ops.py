@@ -214,6 +214,24 @@ def lune_nonempty(
 ) -> jax.Array:
     """(m,) bool — True where lune(a,b) contains a point strictly inside."""
     backend = backend or default_backend()
+    # pow2-pad the edge axis so the compiled program is keyed by scale
+    # bucket, not by the exact (dataset-dependent) unresolved-edge count;
+    # padded edges have w2 = -inf => nothing is ever inside their lune
+    m = edges_a.shape[0]
+    m_pad = 1 << max(0, int(m - 1).bit_length())
+    if m_pad != m and backend != "mesh" and m > 0:
+        zpad = jnp.zeros((m_pad - m,), jnp.int32)
+        edges_a = jnp.concatenate([jnp.asarray(edges_a, jnp.int32), zpad])
+        edges_b = jnp.concatenate([jnp.asarray(edges_b, jnp.int32), zpad])
+        w2 = jnp.concatenate(
+            [jnp.asarray(w2, jnp.float32),
+             jnp.full((m_pad - m,), -jnp.inf, jnp.float32)]
+        )
+        return lune_nonempty(
+            edges_a, edges_b, w2, points, cd2,
+            backend=backend, mesh=mesh, mesh_axis=mesh_axis,
+            block_e=block_e, block_c=block_c,
+        )[:m]
     if backend == "mesh":
         if mesh is None:
             raise ValueError("backend='mesh' requires mesh=")

@@ -120,3 +120,44 @@ def test_validation_errors(blobs520):
     est = MultiHDBSCAN(kmax=8).fit(blobs520)
     with pytest.raises(KeyError, match="not in computed range"):
         est.labels_for(99)
+
+
+def test_fit_rejects_non_finite_input(blobs520):
+    """NaN/inf coordinates must fail fast, before the WSPD control plane and
+    the f32 tie machinery see them."""
+    x = blobs520.copy()
+    x[7, 1] = np.nan
+    with pytest.raises(ValueError, match="non-finite.*row 7"):
+        MultiHDBSCAN(kmax=4).fit(x)
+    x = blobs520.copy()
+    x[3, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        MultiHDBSCAN(kmax=4).fit(x)
+    with pytest.raises(ValueError, match="numeric"):
+        MultiHDBSCAN(kmax=4).fit(np.full((30, 2), "a"))
+
+
+def test_duplicate_heavy_ties_identical_across_backends():
+    """Tie-stress regression: massively duplicated points (every mrd value
+    tied many ways) must produce IDENTICAL labels across the ref / jnp /
+    pallas(interpret) backends for every mpts in the range — the tie-epsilon
+    machinery and the fused cascade's overflow fallback may never let
+    backend-specific noise pick different clusters."""
+    import jax
+
+    rng = np.random.default_rng(13)
+    base = np.concatenate([
+        rng.normal((0, 0), 0.2, size=(25, 2)),
+        rng.normal((3, 3), 0.2, size=(25, 2)),
+    ]).astype(np.float32)
+    x = np.repeat(base, 6, axis=0)               # 300 points, 6-way duplicates
+    kmax = 8
+    backends = ["ref", "jnp"]
+    backends.append("pallas" if jax.default_backend() == "tpu" else "pallas_interpret")
+    fits = {b: MultiHDBSCAN(kmax=kmax, backend=b).fit(x) for b in backends}
+    for mpts in range(2, kmax + 1):
+        ref_labels = fits["ref"].labels_for(mpts)
+        for b in backends[1:]:
+            np.testing.assert_array_equal(
+                ref_labels, fits[b].labels_for(mpts), err_msg=f"{b} mpts={mpts}"
+            )

@@ -22,6 +22,7 @@ def _run(code: str, n_dev: int = 8):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_ring_knn_matches_local():
     _run("""
     import numpy as np, jax, jax.numpy as jnp
@@ -40,6 +41,7 @@ def test_ring_knn_matches_local():
     """)
 
 
+@pytest.mark.slow
 def test_ring_lune_matches_local():
     _run("""
     import numpy as np, jax, jax.numpy as jnp
@@ -64,6 +66,7 @@ def test_ring_lune_matches_local():
     """)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """The jitted train step gives identical losses on 1 device and on a
     4x2 mesh with full sharding rules (GSPMD correctness check)."""

@@ -80,13 +80,29 @@ def test_fit_msts_transfer_ledger(blobs):
     with engine.transfer_ledger() as led:
         msts = multi.fit_msts(x, 8)
     assert engine.io.tags(led) == [
-        "knn", "candidate_slots", "candidate_count", "graph", "mst"
+        "knn", "candidate_count", "stage1_count", "graph", "mst"
     ]
     assert engine.io.count(led, "mst") == 1
-    # the two candidate syncs are single scalars, not bulk transfers
+    # the sizing syncs are a handful of scalars, not bulk transfers
+    assert dict(led)["candidate_count"] <= 32
+    assert dict(led)["stage1_count"] <= 16
+    assert msts.mst_ea.shape == (7, len(x) - 1)
+
+
+def test_fit_msts_slot_path_ledger(blobs):
+    """The retained slot-array path (ref backend) keeps its own contract:
+    two scalar candidate syncs, then graph + mst."""
+    from repro import engine
+    from repro.core import multi
+
+    x, _ = blobs
+    with engine.transfer_ledger() as led:
+        multi.fit_msts(x, 8, backend="ref")
+    assert engine.io.tags(led) == [
+        "knn", "candidate_slots", "candidate_count", "graph", "mst"
+    ]
     assert dict(led)["candidate_slots"] <= 8
     assert dict(led)["candidate_count"] <= 8
-    assert msts.mst_ea.shape == (7, len(x) - 1)
 
 
 def test_fit_msts_exact_variant_ledger(blobs):
@@ -99,7 +115,8 @@ def test_fit_msts_exact_variant_ledger(blobs):
     tags = engine.io.tags(led)
     assert tags[0] == "knn" and tags[-1] == "mst"
     assert set(tags) <= {
-        "knn", "candidate_slots", "candidate_count", "graph", "lune_exact", "mst"
+        "knn", "candidate_slots", "candidate_count", "stage1_count",
+        "graph", "lune_exact", "mst"
     }
 
 
@@ -179,6 +196,7 @@ def test_sbcn_edges_wrapper_matches_candidates(blobs):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_mesh_knn_backend_matches_local():
     """kernels.ops.knn(backend='mesh') == backend='jnp', including the shared
     refine pass, with n NOT divisible by the axis size."""
@@ -196,6 +214,7 @@ def test_mesh_knn_backend_matches_local():
     """)
 
 
+@pytest.mark.slow
 def test_mesh_lune_backend_matches_local():
     _run("""
     import numpy as np, jax, jax.numpy as jnp
@@ -216,6 +235,7 @@ def test_mesh_lune_backend_matches_local():
     """)
 
 
+@pytest.mark.slow
 def test_sharded_boruvka_range_matches_local():
     _run("""
     import numpy as np, jax.numpy as jnp

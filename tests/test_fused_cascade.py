@@ -1,0 +1,173 @@
+"""Fused filter cascade: golden edge-set identity against the retained
+slot-array path, Pallas-kernel vs jnp-twin parity, tie-overflow fallback,
+and the persistent program cache."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import rng as rng_mod
+from repro.kernels import fused_cascade, ops
+
+
+def _moons(n_half=110, seed=3):
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0, np.pi, size=(n_half,))
+    x = np.concatenate([
+        np.stack([np.cos(t), np.sin(t)], 1),
+        np.stack([1.0 - np.cos(t), 0.5 - np.sin(t)], 1),
+    ]).astype(np.float32)
+    return x + rng.normal(0, 0.06, size=x.shape).astype(np.float32)
+
+
+def _anisotropic(n=220, seed=5):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 2))
+    x = x @ np.array([[0.6, -0.6], [-0.35, 0.85]])  # shear
+    x[: n // 2] += (4.0, 0.0)
+    return x.astype(np.float32)
+
+
+def _datasets(blobs):
+    return {
+        "blobs": blobs[0],
+        "moons": _moons(),
+        "anisotropic": _anisotropic(),
+    }
+
+
+@pytest.mark.parametrize("variant", ["rng_star", "rng"])
+def test_fused_matches_slot_path_golden(blobs, variant):
+    """Golden: the fused cascade's edge set must be IDENTICAL (values and
+    order) to the retained slot-array path on every test dataset — not just
+    label-identical."""
+    plan = engine.resolve_plan("auto")
+    plan_ref = dataclasses.replace(plan, backend="ref")  # forces the slot path
+    for name, x in _datasets(blobs).items():
+        xj = jnp.asarray(x)
+        knn_d2, knn_idx = ops.knn(xj, 9)
+        fused = rng_mod.build_rng_graph(xj, knn_d2, knn_idx, variant=variant, plan=plan)
+        slot = rng_mod.build_rng_graph(
+            xj, knn_d2, knn_idx, variant=variant, plan=plan_ref
+        )
+        assert fused.stats.get("path") == "fused", (name, fused.stats)
+        assert "path" not in slot.stats
+        np.testing.assert_array_equal(fused.edges, slot.edges, err_msg=name)
+        # weights may differ by ulps (same diff-form formula, different
+        # compiled programs); the EDGE SET is the bit-exact contract
+        np.testing.assert_allclose(fused.d2, slot.d2, rtol=2e-7, err_msg=name)
+        np.testing.assert_allclose(
+            fused.w2_kmax, slot.w2_kmax, rtol=2e-7, err_msg=name
+        )
+
+
+def test_edge_cascade_pallas_interpret_matches_jnp(blobs):
+    """The Pallas kernel (interpret mode) and the jnp twin are the same
+    program family: identical verdicts, certificates, and float outputs."""
+    x, _ = blobs
+    xj = jnp.asarray(x)
+    k = 7
+    knn_d2, knn_idx = ops.knn(xj, k)
+    cd2k = knn_d2[:, -1]
+    rng = np.random.default_rng(0)
+    m = 513  # deliberately not a tile multiple
+    ea = jnp.asarray(rng.integers(0, len(x), m).astype(np.int32))
+    eb = jnp.asarray((np.asarray(ea) + 1 + rng.integers(0, len(x) - 1, m)) % len(x)).astype(jnp.int32)
+    valid = jnp.asarray(rng.random(m) > 0.1)
+    for k_check in (2, k):
+        out_j = fused_cascade.edge_cascade(
+            xj, cd2k, knn_idx, knn_d2, ea, eb, valid,
+            k_check=k_check, backend="jnp",
+        )
+        out_p = fused_cascade.edge_cascade(
+            xj, cd2k, knn_idx, knn_d2, ea, eb, valid,
+            k_check=k_check, backend="pallas_interpret",
+        )
+        vj = np.asarray(valid)
+        np.testing.assert_array_equal(np.asarray(out_j[0]), np.asarray(out_p[0]))
+        np.testing.assert_array_equal(np.asarray(out_j[1]), np.asarray(out_p[1]))
+        np.testing.assert_allclose(
+            np.asarray(out_j[2])[vj], np.asarray(out_p[2])[vj], rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_j[3])[vj], np.asarray(out_p[3])[vj], rtol=1e-6, atol=1e-7
+        )
+
+
+def test_staged_equals_unstaged_verdict(blobs):
+    """Stage-1 removals are a strict subset of the full check's: staging can
+    never change the final verdict (the exactness argument behind the fused
+    pipeline)."""
+    x, _ = blobs
+    xj = jnp.asarray(x)
+    knn_d2, knn_idx = ops.knn(xj, 9)
+    cd2k = knn_d2[:, -1]
+    rng = np.random.default_rng(1)
+    m = 400
+    ea = jnp.asarray(rng.integers(0, len(x), m).astype(np.int32))
+    eb = jnp.asarray((np.asarray(ea) + 1 + rng.integers(0, len(x) - 1, m)) % len(x)).astype(jnp.int32)
+    valid = jnp.ones((m,), bool)
+    killed1 = fused_cascade.edge_cascade(
+        xj, cd2k, knn_idx, knn_d2, ea, eb, valid, k_check=2, backend="jnp"
+    )[0]
+    killed_full = fused_cascade.edge_cascade(
+        xj, cd2k, knn_idx, knn_d2, ea, eb, valid, k_check=9, backend="jnp"
+    )[0]
+    k1, kf = np.asarray(killed1), np.asarray(killed_full)
+    assert (~kf[k1]).sum() == 0  # stage-1 kills are a subset of full kills
+    assert kf.sum() > k1.sum() > 0  # and staging actually prunes something
+
+
+def test_tie_overflow_falls_back_to_slot_path():
+    """Mass-duplicated points overflow the bounded per-row emission; the
+    build must detect that EXACTLY and fall back to the dense slot path,
+    producing the identical graph the ref backend computes."""
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=(40, 2)).astype(np.float32)
+    x = np.repeat(base, 8, axis=0)  # every point duplicated 8x
+    xj = jnp.asarray(x)
+    knn_d2, knn_idx = ops.knn(xj, 7)
+    plan = engine.resolve_plan("auto")
+    g = rng_mod.build_rng_graph(xj, knn_d2, knn_idx, variant="rng_star", plan=plan)
+    assert g.stats.get("path") != "fused"  # overflow forced the fallback
+    g_ref = rng_mod.build_rng_graph(
+        xj, knn_d2, knn_idx, variant="rng_star",
+        plan=dataclasses.replace(plan, backend="ref"),
+    )
+    np.testing.assert_array_equal(g.edges, g_ref.edges)
+
+
+def test_program_cache_persists_across_plans(blobs):
+    """Two Plan instances over the same data shape share cached programs."""
+    x, _ = blobs
+    xj = jnp.asarray(x)
+    knn_d2, knn_idx = ops.knn(xj, 7)
+    p1 = engine.resolve_plan("auto")
+    p2 = engine.resolve_plan("auto")
+    assert p1 is not p2
+    rng_mod.build_rng_graph(xj, knn_d2, knn_idx, variant="rng_star", plan=p1)
+    before = set(engine.plan.program_cache_info())
+    assert any(k[0] in ("tier_emit", "rowpath_emit") for k in before)
+    rng_mod.build_rng_graph(xj, knn_d2, knn_idx, variant="rng_star", plan=p2)
+    assert set(engine.plan.program_cache_info()) == before  # no new builds
+
+
+def test_fused_pack_limit_falls_back():
+    """n beyond the int32 packing limit must route to the slot path."""
+    assert rng_mod._PACK_LIMIT ** 2 + rng_mod._PACK_LIMIT < 2 ** 31
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(60, 2)).astype(np.float32)
+    xj = jnp.asarray(x)
+    knn_d2, knn_idx = ops.knn(xj, 5)
+    plan = engine.resolve_plan("auto")
+    import unittest.mock as mock
+
+    with mock.patch.object(rng_mod, "_PACK_LIMIT", 10):
+        g = rng_mod.build_rng_graph(xj, knn_d2, knn_idx, variant="rng_star", plan=plan)
+    assert g.stats.get("path") != "fused"
+    g2 = rng_mod.build_rng_graph(xj, knn_d2, knn_idx, variant="rng_star", plan=plan)
+    assert g2.stats.get("path") == "fused"
+    np.testing.assert_array_equal(g.edges, g2.edges)

@@ -43,6 +43,7 @@ def _train_batch(cfg, b=2, s=32):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_forward_and_train_step(arch):
     cfg = get_config(arch).reduced()
     params, _ = init_params(cfg, KEY)
@@ -68,6 +69,7 @@ def test_forward_and_train_step(arch):
     ["qwen2_1_5b", "gemma3_4b", "starcoder2_3b", "deepseek_v2_lite_16b",
      "kimi_k2_1t_a32b", "mamba2_780m", "recurrentgemma_2b", "llava_next_34b"],
 )
+@pytest.mark.slow
 def test_decode_matches_forward(arch):
     cfg = get_config(arch).reduced()
     if cfg.n_experts:  # capacity dropping differs by token count: disable

@@ -1,10 +1,13 @@
-"""Dense Prim vs scipy oracle.  (Property-based Boruvka checks live in
+"""Dense Prim vs scipy oracle, batched-Borůvka parity, and the disconnected
+edge-list error path.  (Property-based Boruvka checks live in
 test_mst_property.py and need hypothesis.)"""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import boruvka, ref as oref
+from repro.core import boruvka, multi, ref as oref
 
 
 def test_prim_dense_matches_scipy(gauss16d):
@@ -16,3 +19,60 @@ def test_prim_dense_matches_scipy(gauss16d):
     )
     got = np.sort(np.sqrt(np.asarray(w2)[1:]))
     np.testing.assert_allclose(got, oref.mst_weights(m), rtol=1e-5, atol=1e-6)
+
+
+def test_batched_range_matches_single_row_boruvka():
+    """The natively-batched rank-key range is bit-identical to the two-phase
+    single-row Borůvka — including under heavy weight ties and zeros."""
+    rng = np.random.default_rng(4)
+    n, m, R = 90, 400, 9
+    ea = rng.integers(0, n, size=m).astype(np.int32)
+    eb = (ea + 1 + rng.integers(0, n - 1, size=m).astype(np.int32)) % n
+    ea_j = jnp.concatenate([jnp.asarray(ea), jnp.arange(n - 1, dtype=jnp.int32)])
+    eb_j = jnp.concatenate([jnp.asarray(eb), jnp.arange(1, n, dtype=jnp.int32)])
+    w = jnp.asarray(np.concatenate(
+        [rng.choice([0.0, 0.25, 0.5, 1.0], size=(R, m)),
+         np.full((R, n - 1), 3.0)], axis=1
+    ).astype(np.float32))
+    got = np.asarray(boruvka.boruvka_mst_range(ea_j, eb_j, w, n=n))
+    want = np.asarray(
+        jax.vmap(lambda wr: boruvka.boruvka_mst(ea_j, eb_j, wr, n=n))(w)
+    )
+    assert (got == want).all()
+    assert (got.sum(axis=1) == n - 1).all()
+
+
+def test_disconnected_edge_list_returns_partial_mst():
+    """boruvka_mst on a disconnected edge list exits via progressed=False
+    with < n-1 edges (the condition fit_msts turns into a hard error)."""
+    ea = jnp.asarray([0, 1, 3, 4], jnp.int32)   # {0,1,2} and {3,4,5} islands
+    eb = jnp.asarray([1, 2, 4, 5], jnp.int32)
+    w = jnp.ones((4,), jnp.float32)
+    in_mst = np.asarray(boruvka.boruvka_mst(ea, eb, w, n=6))
+    assert in_mst.sum() == 4 < 5
+    in_mst_r = np.asarray(
+        boruvka.boruvka_mst_range(ea, eb, jnp.ones((3, 4), jnp.float32), n=6)
+    )
+    assert (in_mst_r.sum(axis=1) == 4).all()
+
+
+def test_fit_msts_raises_on_disconnected_graph(blobs, monkeypatch):
+    """Regression: a disconnected RNG (upstream filter bug) must fail loudly
+    in fit_msts instead of feeding garbage rows into linkage."""
+    from repro.core import rng as rng_mod
+
+    x, _ = blobs
+    real_build = rng_mod.build_rng_graph
+
+    def broken_build(*args, **kwargs):
+        g = real_build(*args, **kwargs)
+        # sever the graph: drop every edge touching the first 30 points
+        keep = (g.edges[:, 0] >= 30) & (g.edges[:, 1] >= 30)
+        return rng_mod.RngGraph(
+            edges=g.edges[keep], d2=g.d2[keep], w2_kmax=g.w2_kmax[keep],
+            variant=g.variant, n_points=g.n_points, stats=g.stats,
+        )
+
+    monkeypatch.setattr(multi, "build_rng_graph", broken_build)
+    with pytest.raises(RuntimeError, match="MST incomplete.*disconnected"):
+        multi.fit_msts(x, 6)

@@ -82,6 +82,7 @@ def test_serving_engine_generates():
     assert eng.last_stats["tok_per_s"] > 0
 
 
+@pytest.mark.slow
 def test_embedding_stream_clusters():
     """data_lib's synthetic embedding stream has recoverable structure."""
     x = data_lib.embedding_stream(seed=1, n=600, dim=8, n_modes=5)

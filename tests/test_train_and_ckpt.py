@@ -19,6 +19,7 @@ ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
 ENV.pop("XLA_FLAGS", None)
 
 
+@pytest.mark.slow
 def test_loss_descends(tmp_path):
     from repro.launch.train import main
 
@@ -29,6 +30,7 @@ def test_loss_descends(tmp_path):
     assert losses[-1] < losses[0] - 0.1, losses
 
 
+@pytest.mark.slow
 def test_preempt_resume_bit_exact(tmp_path):
     """Run A: 10 steps straight.  Run B: preempted at 5 (hard exit), then
     resumed.  Final checkpoints must match bit-for-bit."""
