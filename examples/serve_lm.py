@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serve.engine import Engine, GenRequest
+from repro.serve.lm import Engine, GenRequest
 
 
 def main():

@@ -5,9 +5,13 @@
     est = MultiHDBSCAN(kmax=32).fit(x)
     labels = est.labels_for(mpts=8)        # lazily extracted, cached
     tree = est.hierarchy_for(mpts=8)       # condensed tree + stabilities
+    probs = est.probabilities_for(mpts=8)  # per-point membership strength
     profile = est.mpts_profile()           # the whole density range at a glance
+
+    labels, probs = est.approximate_predict(q, mpts=8)   # out-of-sample
+    all_levels = est.approximate_predict(q)              # ... every mpts at once
 """
 
-from .estimator import MultiHDBSCAN
+from .estimator import Membership, MultiHDBSCAN
 
-__all__ = ["MultiHDBSCAN"]
+__all__ = ["Membership", "MultiHDBSCAN"]

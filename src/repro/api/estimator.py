@@ -19,12 +19,25 @@ Malzer & Baum-style selection options):
 
 from __future__ import annotations
 
+import collections
+import dataclasses
 from typing import Sequence
 
 import numpy as np
 
 from .. import engine
-from ..core import multi
+from ..core import dbcv as dbcv_mod
+from ..core import multi, predict
+
+
+@dataclasses.dataclass
+class Membership:
+    """Per-fitted-point view of one density level: labels + strengths."""
+
+    mpts: int
+    labels: np.ndarray         # (n,) int64, -1 = noise
+    probabilities: np.ndarray  # (n,) float64 in [0, 1], 0 for noise
+    lambdas: np.ndarray        # (n,) float64 departure lambda (0 for noise)
 
 
 class MultiHDBSCAN:
@@ -64,6 +77,12 @@ class MultiHDBSCAN:
         "auto" shards iff the mesh is usable, "single" forces the local
         path, "mesh" errors rather than silently degrading.  Pass a
         pre-built ``engine.Plan`` to pin every chunk/tile size explicitly.
+    max_cached_hierarchies : int, optional
+        Bound on the per-mpts extraction cache (LRU eviction).  ``None``
+        (default) keeps every requested level — right for exploration;
+        long-lived serving processes (``serve.ClusterServeEngine``) set a
+        bound so a hostile query mix cannot hold all R condensed trees
+        resident.
     """
 
     def __init__(
@@ -79,6 +98,7 @@ class MultiHDBSCAN:
         backend: str | None = None,
         mesh=None,
         plan: "engine.Plan | str" = "auto",
+        max_cached_hierarchies: int | None = None,
     ):
         if cluster_selection_method not in ("eom", "leaf"):
             raise ValueError(
@@ -100,10 +120,20 @@ class MultiHDBSCAN:
         self.backend = backend
         self.mesh = mesh
         self.plan = plan
+        if max_cached_hierarchies is not None and max_cached_hierarchies < 1:
+            raise ValueError(
+                f"max_cached_hierarchies must be >= 1 or None; "
+                f"got {max_cached_hierarchies}"
+            )
+        self.max_cached_hierarchies = max_cached_hierarchies
 
         self._msts: multi.MultiMSTResult | None = None
+        self._X: np.ndarray | None = None
         self._linkage: multi.LinkageRange | None = None
-        self._hierarchy_cache: dict[int, multi.HierarchyResult] = {}
+        self._hierarchy_cache: collections.OrderedDict[int, multi.HierarchyResult] = (
+            collections.OrderedDict()
+        )
+        self._walk_cache: dict[int, predict.WalkTable] = {}
 
     # -- fitting -----------------------------------------------------------
 
@@ -144,8 +174,10 @@ class MultiHDBSCAN:
             mpts_values=self.mpts_values,
             plan=self.plan_,
         )
+        self._X = X  # retained for out-of-sample queries (approximate_predict)
         self._linkage = None
-        self._hierarchy_cache = {}
+        self._hierarchy_cache = collections.OrderedDict()
+        self._walk_cache = {}
         self.n_features_in_ = X.shape[1]
         self.n_samples_ = X.shape[0]
         self.mpts_values_ = list(self._msts.mpts_values)
@@ -174,9 +206,16 @@ class MultiHDBSCAN:
         return self._linkage
 
     def hierarchy_for(self, mpts: int) -> multi.HierarchyResult:
-        """Condensed tree / stabilities / labels at one density level (cached)."""
+        """Condensed tree / stabilities / labels at one density level (cached).
+
+        The cache is LRU-bounded when ``max_cached_hierarchies`` is set (the
+        serving configuration); recently queried density levels stay hot,
+        cold ones re-extract from the resident ``LinkageRange`` on demand.
+        """
         msts = self._check_fitted()
-        if mpts not in self._hierarchy_cache:
+        if mpts in self._hierarchy_cache:
+            self._hierarchy_cache.move_to_end(mpts)
+        else:
             self._hierarchy_cache[mpts] = multi.extract_one_from_linkage(
                 msts,
                 self._ensure_linkage(),
@@ -185,11 +224,91 @@ class MultiHDBSCAN:
                 allow_single_cluster=self.allow_single_cluster,
                 cluster_selection_method=self.cluster_selection_method,
             )
+            bound = self.max_cached_hierarchies
+            while bound is not None and len(self._hierarchy_cache) > bound:
+                evicted, _ = self._hierarchy_cache.popitem(last=False)
+                self._walk_cache.pop(evicted, None)
         return self._hierarchy_cache[mpts]
 
     def labels_for(self, mpts: int) -> np.ndarray:
         """Cluster labels (-1 = noise) at one density level (cached)."""
         return self.hierarchy_for(mpts).labels
+
+    def membership_for(self, mpts: int) -> Membership:
+        """Labels + membership probabilities + lambdas of the fitted points.
+
+        The per-point probability is hdbscan-style: the departure lambda of
+        the point relative to its cluster's deepest (finite) departure —
+        1.0 at the cluster core, tapering toward the edge, 0 for noise.
+        """
+        h = self.hierarchy_for(mpts)
+        return Membership(
+            mpts=mpts,
+            labels=h.labels,
+            probabilities=predict.membership_probabilities(h),
+            lambdas=np.asarray(h.point_lambda),
+        )
+
+    def probabilities_for(self, mpts: int) -> np.ndarray:
+        """Cluster membership strength of each fitted point at one level.
+
+        Values in [0, 1]; noise points score 0.  See ``membership_for`` for
+        the labels + lambdas alongside.
+        """
+        return self.membership_for(mpts).probabilities
+
+    def approximate_predict(
+        self, Q, mpts: int | None = None
+    ) -> "tuple[np.ndarray, np.ndarray] | predict.PredictResult":
+        """Out-of-sample assignment of a query batch (no refit).
+
+        One device pass ranks the batch against the fitted points and
+        attaches every query for EVERY fitted mpts row at once; the cached
+        condensed trees then supply labels and membership probabilities per
+        level (McInnes & Healy's ``approximate_predict``, batched across
+        the density range).
+
+        With ``mpts`` given, returns ``(labels, probabilities)`` for that
+        level (hdbscan-style).  With ``mpts=None``, returns the full
+        :class:`~repro.core.predict.PredictResult` — (R, q) labels /
+        probabilities / lambdas / attachment neighbours.
+        """
+        msts = self._check_fitted()
+        Q = np.asarray(Q)
+        predict.validate_queries(Q, self.n_features_in_)
+        res = predict.predict_range(
+            msts,
+            self._X,
+            Q,
+            self.hierarchy_for,
+            plan=self.plan_,
+            mpts_values=None if mpts is None else [mpts],
+            table_cache=self._walk_cache,
+        )
+        if mpts is None:
+            return res
+        return res.labels[0], res.probabilities[0]
+
+    def dbcv_profile(self) -> list[dict]:
+        """DBCV relative validity at every fitted density level.
+
+        The paper's §I motivation as one query: an internal validity score
+        per mpts (computed on the per-mpts mutual-reachability MST, the
+        standard fast approximation), so callers can rank density levels
+        without ground truth.  Returns ``[{"mpts", "dbcv", "n_clusters"}]``.
+        """
+        msts = self._check_fitted()
+        rows = []
+        for mpts in msts.mpts_values:
+            h = self.hierarchy_for(mpts)
+            rows.append({
+                "mpts": mpts,
+                "dbcv": dbcv_mod.dbcv_relative_validity(
+                    h.mst_ea, h.mst_eb, h.mst_w, h.labels
+                ),
+                "n_clusters": h.n_clusters,
+            })
+        return rows
 
     def mst_for(self, mpts: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(ea, eb, w) MST edges under mutual reachability at this mpts."""

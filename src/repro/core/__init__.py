@@ -9,6 +9,7 @@ Public API:
   boruvka_mst(_range) — batched edge-list MSTs
   linkage             — batched device single-linkage (extraction stage 1)
   hierarchy, dbcv     — extraction & validation submodules
+  predict_range       — batched out-of-sample assignment over the fitted state
 """
 
 from . import boruvka, dbcv, hierarchy, linkage, mrd, rng, sbcn, wspd
@@ -28,7 +29,12 @@ from .multi import (
 )
 from .rng import RngGraph, build_rng_graph
 
+# predict consumes multi's result types; import after them (no cycle)
+from . import predict
+from .predict import PredictResult, membership_probabilities, predict_range
+
 __all__ = [
+    "predict", "PredictResult", "membership_probabilities", "predict_range",
     "boruvka", "dbcv", "hierarchy", "linkage", "mrd", "rng", "sbcn", "wspd",
     "boruvka_mst", "boruvka_mst_range", "prim_dense_mst", "single_linkage_batch",
     "core_distances2", "edge_mrd2", "mrd2_from_parts", "reweight_all_mpts",

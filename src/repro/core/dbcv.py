@@ -25,28 +25,56 @@ def dbcv_relative_validity(
     w: np.ndarray,
     labels: np.ndarray,
 ) -> float:
-    n = labels.shape[0]
+    """DBCV relative validity of a labelling over its mrd MST.
+
+    Vectorized over clusters (scatter-max for DSC, scatter-min for DSPC; no
+    per-cluster edge scans), with the degenerate regimes handled by explicit
+    ``np.isinf`` cases rather than value comparisons — an earlier version
+    guarded the missing-crossing-edge branch with ``dspc is np.inf``, a
+    float *identity* check that is False for any computed inf (e.g. an inf
+    edge weight flowing through ``min``), silently misrouting those clusters
+    through the generic formula (inf/inf -> nan).
+
+    Cases, per cluster ``Ci`` (V in [-1, 1], DBCV = sum |Ci|/n * V):
+      * DSPC infinite (no crossing MST edge at all — e.g. every path to the
+        other clusters runs through noise points — or only inf-weight
+        crossing edges): the cluster is unboundedly separated, V = +1.
+      * DSC infinite (an inf-weight internal edge) with finite DSPC:
+        unboundedly sparse, V = -1.
+      * both infinite: the two degeneracies cancel, V = 0.
+      * DSPC == DSC == 0 (duplicate-point cluster touching a duplicate
+        crossing edge): no density contrast either way, V = 0.
+      * otherwise the standard (DSPC - DSC) / max(DSPC, DSC).
+    """
     cl = np.unique(labels[labels >= 0])
     if len(cl) < 2:
         return -1.0
+    K = len(cl)
 
     la, lb = labels[ea], labels[eb]
     internal = (la == lb) & (la >= 0)
     crossing = (la != lb) & (la >= 0) & (lb >= 0)
 
-    score = 0.0
-    n_clustered = int(np.sum(labels >= 0))
-    for c in cl:
-        mask_int = internal & (la == c)
-        dsc = float(w[mask_int].max()) if mask_int.any() else 0.0
-        mask_out = crossing & ((la == c) | (lb == c))
-        dspc = float(w[mask_out].min()) if mask_out.any() else np.inf
-        denom = max(dspc, dsc)
-        v = 0.0 if denom in (0.0, np.inf) and dspc is np.inf else (
-            (dspc - dsc) / denom if denom > 0 else 0.0
+    dsc = np.zeros(K)
+    np.maximum.at(dsc, np.searchsorted(cl, la[internal]), w[internal])
+    dspc = np.full(K, np.inf)
+    cw = w[crossing]
+    np.minimum.at(dspc, np.searchsorted(cl, la[crossing]), cw)
+    np.minimum.at(dspc, np.searchsorted(cl, lb[crossing]), cw)
+
+    denom = np.maximum(dspc, dsc)
+    with np.errstate(invalid="ignore"):
+        v = np.where(
+            np.isinf(dspc) & np.isinf(dsc), 0.0,
+            np.where(
+                np.isinf(dspc), 1.0,
+                np.where(
+                    np.isinf(dsc), -1.0,
+                    np.divide(dspc - dsc, denom, out=np.zeros(K), where=denom > 0),
+                ),
+            ),
         )
-        if not np.isfinite(v):
-            v = 1.0 if dsc == 0.0 else 0.0
-        size_c = int(np.sum(labels == c))
-        score += size_c / max(n_clustered, 1) * v
-    return float(score)
+
+    sizes = np.bincount(np.searchsorted(cl, labels[labels >= 0]), minlength=K)
+    n_clustered = int(sizes.sum())
+    return float(np.sum(sizes / max(n_clustered, 1) * v))

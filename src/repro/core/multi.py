@@ -54,6 +54,7 @@ class HierarchyResult:
     mst_eb: np.ndarray
     mst_w: np.ndarray  # real (non-squared) mrd weights
     selected: list[int] = dataclasses.field(default_factory=list)  # chosen cluster ids
+    point_lambda: np.ndarray | None = None  # (n,) departure lambda (0 for noise)
 
 
 def _validate_min_cluster_size(min_cluster_size: int | None) -> None:
@@ -287,7 +288,7 @@ def extract_one_from_linkage(
         allow_single_cluster=allow_single_cluster,
         cluster_selection_method=cluster_selection_method,
     )
-    labels, _ = hierarchy.labels_for_fast(tree, selected)
+    labels, lam_pt = hierarchy.labels_for_fast(tree, selected)
     return HierarchyResult(
         mpts=mpts,
         labels=labels,
@@ -298,6 +299,7 @@ def extract_one_from_linkage(
         mst_eb=msts.mst_eb[row].astype(np.int64),
         mst_w=msts.mst_w[row],
         selected=selected,
+        point_lambda=lam_pt,
     )
 
 

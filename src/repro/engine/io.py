@@ -20,6 +20,9 @@ that bulk device->host syncs happen ONLY at named materialization points:
                         exact lune scan.
   ``mst``             — the final MST compaction, the single sync of the MST
                         stage.
+  ``predict``         — the out-of-sample path's single sync: per-row
+                        attachment lambdas + neighbours for a query batch
+                        (core.predict; the condensed-tree walk is host work).
 
 Everything else stays device-resident.  ``transfer_ledger`` is the test hook
 that enforces this: inside the context every ``to_host`` call is recorded as

@@ -116,6 +116,23 @@ class Plan:
             refine_slack=self.knn_refine_slack,
         )
 
+    def query_knn(self, xq, x, k_top: int):
+        """Out-of-sample kNN: query rows ranked against the fitted set.
+
+        Always compute-local: a (q, n) cross sweep with q << n is cheap
+        relative to the fit, and the queries arrive on the serving host —
+        sharding them over a mesh would cost more in replication traffic
+        than the sweep itself.  The backend still follows the plan, and all
+        backends share the exact refine pass (prediction parity).
+        """
+        from .. import kernels
+
+        return kernels.ops.query_knn(
+            xq, x, k_top,
+            backend=self.backend,
+            refine_slack=self.knn_refine_slack,
+        )
+
     def lune_nonempty(self, ea, eb, w2, points, cd2):
         """Exact lune-emptiness verdicts for an edge list, placed per plan."""
         from .. import kernels

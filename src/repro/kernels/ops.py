@@ -92,15 +92,17 @@ def _knn_jnp_blocked(x, *, k_top: int, block_q: int = 1024, block_k: int = 2048)
 
 
 @functools.partial(jax.jit, static_argnames=("k_top",))
-def _refine_knn(x, d2, idx, *, k_top: int):
+def _refine_knn(xq, x, idx, *, k_top: int):
     """Diff-based re-evaluation of candidate distances.
 
     The MXU-friendly ``|q|^2+|k|^2-2qk`` form loses ~1e-3 relative accuracy to
     cancellation when point norms dwarf pair distances.  The kernels therefore
     over-select ``k_top + slack`` candidates and this pass recomputes their
     distances exactly (f32 diffs), re-sorts, and keeps the best ``k_top``.
+    ``xq`` is the query set (== ``x`` for the self-kNN path; a separate batch
+    for out-of-sample queries).
     """
-    n = x.shape[0]
+    n = xq.shape[0]
 
     def chunk(args):
         xc, idx_c = args
@@ -109,10 +111,10 @@ def _refine_knn(x, d2, idx, *, k_top: int):
 
     rows = 4096
     n_pad = -(-n // rows) * rows
-    xp = jnp.zeros((n_pad,) + x.shape[1:], x.dtype).at[:n].set(x)
+    xp = jnp.zeros((n_pad,) + xq.shape[1:], xq.dtype).at[:n].set(xq)
     ip = jnp.zeros((n_pad,) + idx.shape[1:], idx.dtype).at[:n].set(idx)
     d2r = jax.lax.map(
-        chunk, (xp.reshape(-1, rows, x.shape[1]), ip.reshape(-1, rows, idx.shape[1]))
+        chunk, (xp.reshape(-1, rows, xq.shape[1]), ip.reshape(-1, rows, idx.shape[1]))
     ).reshape(n_pad, -1)[:n]
     d2r = jnp.where(idx < 0, jnp.inf, d2r)
     neg, order = jax.lax.top_k(-d2r, k_top)
@@ -162,7 +164,103 @@ def knn(
         d2, idx = _topk_pallas(
             x, k_eff, block_q=block_q, block_k=block_k, interpret=interpret
         )
-    return _refine_knn(x, d2, idx, k_top=k_top)
+    return _refine_knn(x, x, idx, k_top=k_top)
+
+
+# ---------------------------------------------------------------------------
+# Cross-set kNN (out-of-sample queries against a fitted point set)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k_top", "block_q", "block_k"))
+def _query_knn_blocked(xq, x, *, k_top: int, block_q: int = 1024, block_k: int = 2048):
+    """Blocked jnp cross-set kNN: rows of ``xq`` against all rows of ``x``.
+
+    Same streaming top-k structure as ``_knn_jnp_blocked``, minus the
+    self-exclusion (queries are not members of the fitted set).
+    """
+    q, d = xq.shape
+    n = x.shape[0]
+    block_q = min(block_q, q)
+    q_pad = -(-q // block_q) * block_q
+    qp = jnp.zeros((q_pad, d), xq.dtype).at[:q].set(xq)
+    qn = jnp.sum(qp.astype(jnp.float32) ** 2, axis=-1)
+
+    kb = min(block_k, n)
+    n_kb = -(-n // kb)
+    xkp = jnp.zeros((n_kb * kb, d), x.dtype).at[:n].set(x)
+    xkn = jnp.sum(xkp.astype(jnp.float32) ** 2, axis=-1)
+
+    def process_qblock(q0):
+        qb = jax.lax.dynamic_slice_in_dim(qp, q0, block_q).astype(jnp.float32)
+        qbn = jax.lax.dynamic_slice_in_dim(qn, q0, block_q)
+
+        def kv_step(carry, kb_i):
+            top_d, top_i = carry
+            k0 = kb_i * kb
+            k = jax.lax.dynamic_slice_in_dim(xkp, k0, kb).astype(jnp.float32)
+            kn = jax.lax.dynamic_slice_in_dim(xkn, k0, kb)
+            d2 = qbn[:, None] + kn[None, :] - 2.0 * qb @ k.T
+            d2 = jnp.maximum(d2, 0.0)
+            col_g = k0 + jnp.arange(kb)[None, :]
+            d2 = jnp.where(col_g >= n, jnp.inf, d2)
+            cat_d = jnp.concatenate([top_d, d2], axis=1)
+            cat_i = jnp.concatenate(
+                [top_i, jnp.broadcast_to(col_g, d2.shape)], axis=1
+            )
+            nt, at = jax.lax.top_k(-cat_d, k_top)
+            return (-nt, jnp.take_along_axis(cat_i, at, axis=1)), None
+
+        init = (
+            jnp.full((block_q, k_top), jnp.inf, jnp.float32),
+            jnp.full((block_q, k_top), -1, jnp.int32),
+        )
+        (top_d, top_i), _ = jax.lax.scan(kv_step, init, jnp.arange(n_kb))
+        return top_d, top_i
+
+    q_starts = jnp.arange(q_pad // block_q) * block_q
+    top_d, top_i = jax.lax.map(process_qblock, q_starts)
+    return top_d.reshape(q_pad, k_top)[:q], top_i.reshape(q_pad, k_top)[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("k_top",))
+def _query_knn_ref(xq, x, *, k_top: int):
+    """Exact cross-set kNN oracle: full (q, n) matrix + top_k."""
+    d2 = ref.pairwise_d2_ref(xq, x)
+    neg, idx = jax.lax.top_k(-d2, k_top)
+    return -neg, idx
+
+
+def query_knn(
+    xq: jax.Array,
+    x: jax.Array,
+    k_top: int,
+    *,
+    backend: str | None = None,
+    refine_slack: int = 8,
+) -> tuple[jax.Array, jax.Array]:
+    """k nearest *fitted* neighbors of each query row.  (d2 ascending, idx).
+
+    The out-of-sample twin of ``knn``: queries in ``xq`` are ranked against
+    the fitted set ``x`` (no self-exclusion — queries are not fitted points).
+    Every backend routes its over-selected candidates through the same
+    ``_refine_knn`` exact re-evaluation as the self-kNN path, so prediction
+    is bit-identical across ``ref``/``jnp``/``pallas*`` backends.  The
+    Pallas backends use the blocked jnp program: the cross-set pass is a
+    (q, n) sweep with q << n, far off the self-kNN kernel's hot path.
+    """
+    backend = backend or default_backend()
+    n = x.shape[0]
+    if k_top > n:
+        raise ValueError(f"k_top={k_top} must be <= n={n} fitted points")
+    if xq.shape[0] == 0:
+        raise ValueError("query set is empty (callers handle q=0 upstream)")
+    k_eff = min(n, k_top + refine_slack)
+    if backend == "ref":
+        d2, idx = _query_knn_ref(xq, x, k_top=k_eff)
+    else:
+        d2, idx = _query_knn_blocked(xq, x, k_top=k_eff)
+    return _refine_knn(xq, x, idx, k_top=k_top)
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,13 @@
-from . import engine
+"""Serving layer.
 
-__all__ = ["engine"]
+``engine.ClusterServeEngine`` is the clustering serve surface (the repo's
+actual workload): fit-once process-resident state, micro-batched
+out-of-sample prediction, LRU-bounded per-mpts extraction.  ``lm`` keeps
+the small batched LM decode engine used by the accelerator-side smoke
+tests and examples/serve_lm.py.
+"""
+
+from . import engine, lm
+from .engine import ClusterServeEngine
+
+__all__ = ["ClusterServeEngine", "engine", "lm"]

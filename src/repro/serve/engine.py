@@ -1,89 +1,354 @@
-"""Minimal batched serving engine: prefill -> decode loop with sampling.
+"""Clustering serve engine: fit once, answer heavy query traffic.
 
-Production posture without production scope: a fixed-batch continuous loop
-(join at prefill boundaries), greedy/temperature sampling, EOS early-exit
-mask, and jitted step functions shared across requests.  Used by
-examples/serve_lm.py and the serve smoke tests.
+The ROADMAP north-star ("serve heavy traffic from millions of users") gets
+its clustering-shaped surface here: a process-resident engine over ONE
+fitted :class:`~repro.api.MultiHDBSCAN` whose fitted multi-MST state answers
+three request families —
+
+  * ``predict``  — out-of-sample assignment of query points (any subset of
+    the fitted mpts range, or all of it),
+  * ``labels`` / ``membership`` — the fitted labelling at one density level,
+    with optional per-request selection overrides (eom/leaf — Malzer &
+    Baum-style selection as a cheap per-query knob over the same trees),
+  * ``profile`` / ``dbcv_profile`` — whole-range summaries.
+
+Requests enter a queue from any number of client threads; ONE worker thread
+owns the estimator (no lock on the fitted state) and **micro-batches**
+concurrent predict requests: after the first request lands it waits up to
+``max_delay_ms`` for company, then concatenates up to ``max_batch`` query
+rows into a single device pass — one ``query_knn`` + attach program serves
+every rider, whatever mix of mpts values they asked for.  Per-mpts
+hierarchy extractions are LRU-bounded (``hierarchy_cache_size``) so a
+hostile query mix cannot hold all R condensed trees resident.
+
+``benchmarks/run.py`` drives this engine for the ``serve`` section of
+``BENCH_pipeline.json`` (warm p50/p95 latency, queries/s).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
+from concurrent.futures import Future
+from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..models import get_model
+from ..core import multi, predict
 
 
 @dataclasses.dataclass
-class GenRequest:
-    prompt: np.ndarray          # (S,) int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0    # 0 => greedy
-    eos_id: int = 1
+class _Pending:
+    kind: str                   # "predict" | "labels" | "membership" | "profile" | "dbcv"
+    future: Future
+    t_submit: float
+    q: np.ndarray | None = None
+    mpts: int | None = None
+    selection: str | None = None        # per-request selection override
+    allow_single_cluster: bool | None = None
 
 
-class Engine:
-    def __init__(self, cfg, params, max_len: int = 512, cache_dtype=jnp.float32):
-        self.cfg = cfg
-        self.params = params
-        self.model = get_model(cfg)
-        self.max_len = max_len
-        self.cache_dtype = cache_dtype
+class ClusterServeEngine:
+    """Process-resident serving over one fitted MultiHDBSCAN.
 
-        def _prefill(params, tokens):
-            return self.model.prefill(
-                params, cfg, tokens, max_len=max_len, cache_dtype=cache_dtype
+    Parameters
+    ----------
+    estimator : repro.api.MultiHDBSCAN
+        A *fitted* estimator (the engine raises otherwise).  The engine
+        takes ownership: it installs its LRU bound on the estimator's
+        hierarchy cache and serializes all access through its worker.
+    max_batch : int
+        Max query rows fused into one predict device pass.
+    max_delay_ms : float
+        How long the worker holds the first predict request of a batch
+        waiting for riders.  The knob trades p50 latency for throughput.
+    hierarchy_cache_size : int
+        LRU bound on cached per-mpts extractions (and their walk tables).
+    """
+
+    def __init__(
+        self,
+        estimator,
+        *,
+        max_batch: int = 64,
+        max_delay_ms: float = 2.0,
+        hierarchy_cache_size: int = 8,
+    ):
+        if getattr(estimator, "_msts", None) is None:
+            raise RuntimeError(
+                "ClusterServeEngine needs a fitted estimator; call fit(X) first "
+                "(or use ClusterServeEngine.fit)"
             )
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1; got {max_batch}")
+        if hierarchy_cache_size < 1:
+            raise ValueError(
+                f"hierarchy_cache_size must be >= 1; got {hierarchy_cache_size}"
+            )
+        self.estimator = estimator
+        self.max_batch = max_batch
+        self.max_delay_ms = max_delay_ms
+        estimator.max_cached_hierarchies = hierarchy_cache_size
 
-        def _decode(params, cache, cur, key, temperature):
-            logits, cache = self.model.decode_step(params, cfg, cache, cur)
-            greedy = jnp.argmax(logits, axis=-1)
-            sampled = jax.random.categorical(key, logits / jnp.maximum(temperature, 1e-6))
-            nxt = jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
-            return nxt[:, None], cache
+        self._queue: collections.deque[_Pending] = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._latencies: collections.deque[float] = collections.deque(maxlen=8192)
+        self._n_requests = 0
+        self._n_queries = 0
+        self._n_batches = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._worker = threading.Thread(
+            target=self._run, name="cluster-serve-worker", daemon=True
+        )
+        self._worker.start()
 
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
+    @classmethod
+    def fit(cls, X, *, serve_options: dict | None = None, **estimator_options):
+        """Fit a fresh estimator and wrap it (the one-call serving path)."""
+        from ..api import MultiHDBSCAN
 
-    def generate(self, requests: list[GenRequest], seed: int = 0) -> list[np.ndarray]:
-        """Batched generation; prompts are right-aligned padded to equal len."""
-        cfg = self.cfg
-        b = len(requests)
-        plen = max(len(r.prompt) for r in requests)
-        toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with BOS=0
-        max_new = max(r.max_new_tokens for r in requests)
-        temp = float(requests[0].temperature)
+        est = MultiHDBSCAN(**estimator_options).fit(X)
+        return cls(est, **(serve_options or {}))
 
-        t0 = time.monotonic()
-        logits, cache = self._prefill(self.params, jnp.asarray(toks))
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        outs = [np.asarray(nxt)]
-        key = jax.random.PRNGKey(seed)
-        done = np.zeros(b, bool)
-        for t in range(max_new - 1):
-            key, sub = jax.random.split(key)
-            nxt, cache = self._decode(self.params, cache, nxt, sub, jnp.float32(temp))
-            cur = np.asarray(nxt)
-            outs.append(cur)
-            done |= (cur[:, 0] == np.array([r.eos_id for r in requests]))
-            if done.all():
-                break
-        dt = time.monotonic() - t0
-        gen = np.concatenate(outs, axis=1)
-        results = []
-        for i, r in enumerate(requests):
-            row = gen[i][: r.max_new_tokens]
-            eos = np.nonzero(row == r.eos_id)[0]
-            results.append(row[: eos[0] + 1] if len(eos) else row)
-        self.last_stats = {
-            "wall_s": dt,
-            "tokens": int(sum(len(r) for r in results)),
-            "tok_per_s": float(sum(len(r) for r in results) / max(dt, 1e-9)),
+    # -- client surface (thread-safe) --------------------------------------
+
+    def submit_predict(self, Q, mpts: int | None = None) -> Future:
+        """Enqueue an out-of-sample batch; resolves to (labels, probs) for
+        one mpts, or a PredictResult for the whole range (mpts=None).
+
+        Malformed requests (wrong feature count, NaN coordinates, mpts
+        outside the fitted range) are rejected HERE, before enqueueing — a
+        bad request must fail alone, never poison the strangers it would
+        have been micro-batched with.
+        """
+        Q = np.asarray(Q)
+        if Q.ndim == 1:
+            Q = Q[None, :]
+        predict.validate_queries(Q, self.estimator.n_features_in_)
+        if mpts is not None:
+            self.estimator._check_fitted().row_of(mpts)  # KeyError early
+        return self._submit(_Pending("predict", Future(), time.monotonic(), q=Q, mpts=mpts))
+
+    def predict(self, Q, mpts: int | None = None, timeout: float | None = 60.0):
+        """Blocking ``submit_predict`` (still rides shared micro-batches)."""
+        return self.submit_predict(Q, mpts).result(timeout=timeout)
+
+    def labels(
+        self,
+        mpts: int,
+        *,
+        cluster_selection_method: str | None = None,
+        allow_single_cluster: bool | None = None,
+        timeout: float | None = 60.0,
+    ) -> np.ndarray:
+        """Fitted labels at one level; selection overrides are per-request."""
+        p = _Pending(
+            "labels", Future(), time.monotonic(), mpts=mpts,
+            selection=cluster_selection_method,
+            allow_single_cluster=allow_single_cluster,
+        )
+        return self._submit(p).result(timeout=timeout)
+
+    def membership(self, mpts: int, timeout: float | None = 60.0):
+        """Labels + membership probabilities + lambdas at one level."""
+        p = _Pending("membership", Future(), time.monotonic(), mpts=mpts)
+        return self._submit(p).result(timeout=timeout)
+
+    def profile(self, timeout: float | None = 60.0) -> list[dict]:
+        return self._submit(
+            _Pending("profile", Future(), time.monotonic())
+        ).result(timeout=timeout)
+
+    def dbcv_profile(self, timeout: float | None = 60.0) -> list[dict]:
+        return self._submit(
+            _Pending("dbcv", Future(), time.monotonic())
+        ).result(timeout=timeout)
+
+    def stats(self) -> dict:
+        """Latency/throughput counters over the engine's lifetime so far."""
+        with self._cv:
+            lat = sorted(self._latencies)
+            n_req, n_q, n_b = self._n_requests, self._n_queries, self._n_batches
+            t0, t1 = self._t_first, self._t_last
+        pct = lambda p: float(lat[min(len(lat) - 1, int(p * len(lat)))]) if lat else 0.0  # noqa: E731
+        wall = (t1 - t0) if (t0 is not None and t1 is not None and t1 > t0) else 0.0
+        return {
+            "n_requests": n_req,
+            "n_queries": n_q,
+            "n_batches": n_b,
+            "p50_ms": round(pct(0.50) * 1e3, 3),
+            "p95_ms": round(pct(0.95) * 1e3, 3),
+            "queries_per_s": round(n_q / wall, 1) if wall > 0 else 0.0,
+            "mean_batch": round(n_q / max(n_b, 1), 2),
         }
-        return results
+
+    def reset_stats(self) -> None:
+        """Zero the latency/throughput counters (e.g. after warmup)."""
+        with self._cv:
+            self._latencies.clear()
+            self._n_requests = self._n_queries = self._n_batches = 0
+            self._t_first = self._t_last = None
+
+    def close(self) -> None:
+        """Drain nothing, reject everything pending, stop the worker."""
+        with self._cv:
+            self._closed = True
+            pending = list(self._queue)
+            self._queue.clear()
+            self._cv.notify_all()
+        for p in pending:
+            p.future.set_exception(RuntimeError("ClusterServeEngine closed"))
+        self._worker.join(timeout=10.0)
+
+    def __enter__(self) -> "ClusterServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker ------------------------------------------------------------
+
+    def _submit(self, p: _Pending):
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("ClusterServeEngine is closed")
+            self._queue.append(p)
+            self._cv.notify_all()
+        return p.future
+
+    def _take_batch(self) -> list[_Pending]:
+        """Pop the next unit of work: one non-predict request, or a micro-
+        batch of predict requests (first-come, held ``max_delay_ms`` for
+        riders, capped at ``max_batch`` total query rows)."""
+        with self._cv:
+            while not self._queue and not self._closed:
+                self._cv.wait(timeout=0.1)
+            if self._closed:
+                return []
+            head = self._queue.popleft()
+            if head.kind != "predict":
+                return [head]
+            batch = [head]
+            rows = len(head.q)
+            deadline = time.monotonic() + self.max_delay_ms / 1e3
+            while rows < self.max_batch:
+                if not self._queue:
+                    remain = deadline - time.monotonic()
+                    if remain <= 0:
+                        break
+                    self._cv.wait(timeout=remain)
+                    if self._closed:
+                        break
+                    continue
+                if self._queue[0].kind != "predict":
+                    break  # preserve FIFO fairness for non-predict work
+                nxt = self._queue[0]
+                if rows + len(nxt.q) > self.max_batch and rows > 0:
+                    break
+                self._queue.popleft()
+                batch.append(nxt)
+                rows += len(nxt.q)
+            return batch
+
+    def _run(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                return
+            try:
+                if batch[0].kind == "predict":
+                    self._serve_predict(batch)
+                else:
+                    self._serve_one(batch[0])
+            except Exception as e:  # noqa: BLE001 - failures belong to callers
+                for p in batch:
+                    if not p.future.done():
+                        p.future.set_exception(e)
+
+    def _serve_predict(self, batch: list[_Pending]) -> None:
+        est = self.estimator
+        msts = est._check_fitted()
+        # one device pass for every rider: union of requested levels
+        # (any full-range request widens it to the whole fitted range)
+        if any(p.mpts is None for p in batch):
+            mpts_values: Sequence[int] = list(msts.mpts_values)
+        else:
+            mpts_values = sorted({p.mpts for p in batch})
+        Q = np.concatenate([p.q for p in batch], axis=0)
+        res = predict.predict_range(
+            msts,
+            est._X,
+            Q,
+            est.hierarchy_for,
+            plan=est.plan_,
+            mpts_values=list(mpts_values),
+            table_cache=est._walk_cache,
+        )
+        t_done = time.monotonic()
+        start = 0
+        for p in batch:
+            stop = start + len(p.q)
+            if p.mpts is None:
+                out = predict.PredictResult(
+                    mpts_values=list(res.mpts_values),
+                    labels=res.labels[:, start:stop],
+                    probabilities=res.probabilities[:, start:stop],
+                    lambdas=res.lambdas[:, start:stop],
+                    neighbors=res.neighbors[:, start:stop],
+                )
+            else:
+                r = res.mpts_values.index(p.mpts)
+                out = (res.labels[r, start:stop], res.probabilities[r, start:stop])
+            p.future.set_result(out)
+            start = stop
+        self._account(batch, t_done, n_queries=len(Q), n_batches=1)
+
+    def _serve_one(self, p: _Pending) -> None:
+        est = self.estimator
+        if p.kind == "labels":
+            if p.selection is None and p.allow_single_cluster is None:
+                out = est.labels_for(p.mpts)
+            else:
+                # per-request selection knob: re-select over the SAME cached
+                # linkage, without disturbing the estimator's configuration
+                msts = est._check_fitted()
+                h = multi.extract_one_from_linkage(
+                    msts,
+                    est._ensure_linkage(),
+                    msts.row_of(p.mpts),
+                    min_cluster_size=est.min_cluster_size,
+                    allow_single_cluster=(
+                        est.allow_single_cluster
+                        if p.allow_single_cluster is None
+                        else p.allow_single_cluster
+                    ),
+                    cluster_selection_method=p.selection or est.cluster_selection_method,
+                )
+                out = h.labels
+        elif p.kind == "membership":
+            out = est.membership_for(p.mpts)
+        elif p.kind == "profile":
+            out = est.mpts_profile()
+        elif p.kind == "dbcv":
+            out = est.dbcv_profile()
+        else:  # pragma: no cover - _Pending kinds are internal
+            raise ValueError(f"unknown request kind {p.kind!r}")
+        p.future.set_result(out)
+        self._account([p], time.monotonic(), n_queries=0, n_batches=0)
+
+    def _account(
+        self, batch: list[_Pending], t_done: float, *, n_queries: int, n_batches: int
+    ) -> None:
+        with self._cv:
+            for p in batch:
+                self._latencies.append(t_done - p.t_submit)
+            self._n_requests += len(batch)
+            self._n_queries += n_queries
+            self._n_batches += n_batches
+            if self._t_first is None:
+                self._t_first = batch[0].t_submit
+            self._t_last = t_done

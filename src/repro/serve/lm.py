@@ -1,0 +1,102 @@
+"""Minimal batched LM serving engine: prefill -> decode loop with sampling.
+
+Production posture without production scope: a fixed-batch continuous loop
+(join at prefill boundaries), per-request greedy/temperature sampling, EOS
+early-exit masking, and jitted step functions shared across requests.  Used
+by examples/serve_lm.py and the serve smoke tests.  (The clustering serve
+surface — the repo's actual workload — lives in ``serve.engine``.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import get_model
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0    # 0 => greedy
+    eos_id: int = 1
+
+
+class Engine:
+    def __init__(self, cfg, params, max_len: int = 512, cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.model = get_model(cfg)
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+
+        def _prefill(params, tokens):
+            return self.model.prefill(
+                params, cfg, tokens, max_len=max_len, cache_dtype=cache_dtype
+            )
+
+        def _decode(params, cache, cur, key, temps):
+            # temps is (b,): each request samples at ITS OWN temperature —
+            # a batch must never inherit request 0's setting
+            logits, cache = self.model.decode_step(params, cfg, cache, cur)
+            greedy = jnp.argmax(logits, axis=-1)
+            sampled = jax.random.categorical(
+                key, logits / jnp.maximum(temps, 1e-6)[:, None]
+            )
+            nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+            return nxt[:, None], cache
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def generate(self, requests: list[GenRequest], seed: int = 0) -> list[np.ndarray]:
+        """Batched generation; prompts are right-aligned padded to equal len."""
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with BOS=0
+        max_new = max(r.max_new_tokens for r in requests)
+        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+        eos = np.asarray([r.eos_id for r in requests], np.int32)
+
+        t0 = time.monotonic()
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        cur = np.asarray(nxt)
+        outs = [cur]
+        key = jax.random.PRNGKey(seed)
+        done = cur[:, 0] == eos
+        for _ in range(max_new - 1):
+            if done.all():
+                break
+            key, sub = jax.random.split(key)
+            nxt, cache = self._decode(self.params, cache, nxt, sub, temps)
+            cur = np.asarray(nxt)
+            # rows that already emitted EOS keep emitting EOS: sampled junk
+            # from finished rows must never reach results or the stats
+            cur = np.where(done[:, None], eos[:, None], cur)
+            outs.append(cur)
+            done |= cur[:, 0] == eos
+        dt = time.monotonic() - t0
+        gen = np.concatenate(outs, axis=1)
+        results = []
+        for i, r in enumerate(requests):
+            row = gen[i][: r.max_new_tokens]
+            hit = np.nonzero(row == r.eos_id)[0]
+            results.append(row[: hit[0] + 1] if len(hit) else row)
+        # per-request generated counts stop at EOS, so the throughput stat
+        # reflects real tokens, not padding decoded for the batch laggards
+        n_tokens = int(sum(len(r) for r in results))
+        self.last_stats = {
+            "wall_s": dt,
+            "tokens": n_tokens,
+            "tok_per_s": float(n_tokens / max(dt, 1e-9)),
+            "batch_steps": int(gen.shape[1]),
+        }
+        return results

@@ -102,6 +102,68 @@ def test_mpts_profile(fitted):
     assert any(r["n_clusters"] == 3 for r in prof)
 
 
+def test_probabilities_for_matches_docstring_promise(blobs520, fitted):
+    """The estimator docstring has promised probabilities_for(mpts) since
+    PR 1; pin the implementation: [0, 1], 0 for noise, every cluster peaks
+    at 1.0, consistent with membership_for."""
+    for mpts in (2, 8, 16):
+        probs = fitted.probabilities_for(mpts)
+        labels = fitted.labels_for(mpts)
+        assert probs.shape == (len(blobs520),)
+        assert np.all((probs >= 0.0) & (probs <= 1.0))
+        assert np.all(probs[labels == -1] == 0.0)
+        assert np.all(probs[labels >= 0] > 0.0)
+        for c in np.unique(labels[labels >= 0]):
+            assert probs[labels == c].max() == pytest.approx(1.0)
+        m = fitted.membership_for(mpts)
+        np.testing.assert_array_equal(m.probabilities, probs)
+        np.testing.assert_array_equal(m.labels, labels)
+
+
+def test_selected_labels_are_contiguous(blobs520):
+    """mpts_profile's ``np.bincount(labels, minlength=n_clusters)`` assumes
+    labels_for_fast emits contiguous labels 0..n_clusters-1 with every
+    selected cluster non-empty; pin that invariant across selection
+    methods, allow_single_cluster, and the whole mpts range."""
+    from repro.core import hierarchy
+
+    for method in ("eom", "leaf"):
+        for single in (False, True):
+            est = MultiHDBSCAN(
+                kmax=8,
+                cluster_selection_method=method,
+                allow_single_cluster=single,
+            ).fit(blobs520)
+            for mpts in est.mpts_values_:
+                h = est.hierarchy_for(mpts)
+                present = np.unique(h.labels[h.labels >= 0])
+                np.testing.assert_array_equal(
+                    present,
+                    np.arange(len(present)),
+                    err_msg=f"{method}/single={single}/mpts={mpts}",
+                )
+                assert h.n_clusters == len(h.selected) == len(present)
+                # and directly through labels_for_fast (the producer)
+                lf, _ = hierarchy.labels_for_fast(h.condensed, h.selected)
+                np.testing.assert_array_equal(lf, h.labels)
+            prof = est.mpts_profile()
+            for row in prof:
+                assert sum(row["cluster_sizes"]) + row["n_noise"] == len(blobs520)
+                assert all(s > 0 for s in row["cluster_sizes"])
+
+
+def test_hierarchy_cache_lru_bound(blobs520):
+    est = MultiHDBSCAN(kmax=8, max_cached_hierarchies=2).fit(blobs520)
+    first = est.labels_for(4).copy()
+    est.labels_for(5)
+    est.labels_for(6)  # evicts mpts=4
+    assert list(est._hierarchy_cache) == [5, 6]
+    np.testing.assert_array_equal(est.labels_for(4), first)  # re-extracts
+    assert list(est._hierarchy_cache) == [6, 4]
+    with pytest.raises(ValueError, match="max_cached_hierarchies"):
+        MultiHDBSCAN(kmax=4, max_cached_hierarchies=0)
+
+
 def test_validation_errors(blobs520):
     with pytest.raises(RuntimeError, match="not fitted"):
         MultiHDBSCAN(kmax=4).labels_for(2)

@@ -1,0 +1,137 @@
+"""DBCV relative validity: degenerate-regime units + loop-reference parity.
+
+Regression context: the guard for the missing-crossing-edge case used to be
+``dspc is np.inf`` — a float *identity* check, False for any computed inf —
+so those clusters fell through to the generic formula (inf/inf -> nan).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dbcv import dbcv_relative_validity
+
+
+def test_single_cluster_is_degenerate():
+    labels = np.array([0, 0, 0, 0])
+    ea, eb = np.array([0, 1, 2]), np.array([1, 2, 3])
+    w = np.array([1.0, 1.0, 1.0])
+    assert dbcv_relative_validity(ea, eb, w, labels) == -1.0
+
+
+def test_all_noise_is_degenerate():
+    labels = np.array([-1, -1, -1])
+    ea, eb = np.array([0, 1]), np.array([1, 2])
+    w = np.array([1.0, 1.0])
+    assert dbcv_relative_validity(ea, eb, w, labels) == -1.0
+
+
+def test_two_well_separated_clusters_score_high():
+    labels = np.array([0, 0, 0, 1, 1, 1])
+    ea = np.array([0, 1, 2, 3, 4])
+    eb = np.array([1, 2, 3, 4, 5])
+    w = np.array([0.1, 0.1, 10.0, 0.1, 0.1])  # tight clusters, wide bridge
+    score = dbcv_relative_validity(ea, eb, w, labels)
+    assert score == pytest.approx((10.0 - 0.1) / 10.0)
+
+
+def test_no_crossing_edges_means_perfect_separation():
+    """Clusters connected only THROUGH noise points have no crossing MST
+    edge at all: separation is unbounded, V = +1 for both."""
+    labels = np.array([0, 0, 1, 1, -1])
+    ea = np.array([0, 2, 1, 4])
+    eb = np.array([1, 3, 4, 2])
+    w = np.array([0.1, 0.1, 5.0, 5.0])  # cluster-noise edges are not crossing
+    assert dbcv_relative_validity(ea, eb, w, labels) == pytest.approx(1.0)
+
+
+def test_computed_inf_crossing_edge_hits_the_separated_branch():
+    """The regression proper: an inf WEIGHT flowing through min() produces a
+    computed inf that the old identity check missed (nan score)."""
+    labels = np.array([0, 0, 1, 1])
+    ea = np.array([0, 2, 1])
+    eb = np.array([1, 3, 2])
+    w = np.array([0.1, 0.1, np.inf])
+    score = dbcv_relative_validity(ea, eb, w, labels)
+    assert np.isfinite(score)
+    assert score == pytest.approx(1.0)
+
+
+def test_inf_internal_edge_scores_minus_one():
+    labels = np.array([0, 0, 1, 1])
+    ea = np.array([0, 2, 1])
+    eb = np.array([1, 3, 2])
+    w = np.array([np.inf, 0.1, 1.0])  # cluster 0 unboundedly sparse
+    score = dbcv_relative_validity(ea, eb, w, labels)
+    # cluster 0: V = -1; cluster 1: (1.0 - 0.1) / 1.0 = 0.9; equal sizes
+    assert score == pytest.approx(0.5 * (-1.0) + 0.5 * 0.9)
+
+
+def test_zero_weight_edges_give_zero_contrast():
+    """Duplicate-point regime: internal and crossing edges all at weight 0
+    -> no density contrast in either direction, V = 0 (not nan, not 1)."""
+    labels = np.array([0, 0, 1, 1])
+    ea = np.array([0, 2, 1])
+    eb = np.array([1, 3, 2])
+    w = np.zeros(3)
+    assert dbcv_relative_validity(ea, eb, w, labels) == 0.0
+
+
+def _dbcv_loop_reference(ea, eb, w, labels):
+    """Per-cluster loop transliteration of the documented cases."""
+    cl = np.unique(labels[labels >= 0])
+    if len(cl) < 2:
+        return -1.0
+    n_clustered = int(np.sum(labels >= 0))
+    la, lb = labels[ea], labels[eb]
+    internal = (la == lb) & (la >= 0)
+    crossing = (la != lb) & (la >= 0) & (lb >= 0)
+    score = 0.0
+    for c in cl:
+        mi = internal & (la == c)
+        dsc = float(w[mi].max()) if mi.any() else 0.0
+        mo = crossing & ((la == c) | (lb == c))
+        dspc = float(w[mo].min()) if mo.any() else float("inf")
+        if np.isinf(dspc) and np.isinf(dsc):
+            v = 0.0
+        elif np.isinf(dspc):
+            v = 1.0
+        elif np.isinf(dsc):
+            v = -1.0
+        else:
+            denom = max(dspc, dsc)
+            v = (dspc - dsc) / denom if denom > 0 else 0.0
+        score += np.sum(labels == c) / n_clustered * v
+    return float(score)
+
+
+def test_vectorized_matches_loop_reference_on_random_instances():
+    rng = np.random.default_rng(7)
+    for trial in range(30):
+        n = int(rng.integers(6, 40))
+        labels = rng.integers(-1, 4, size=n)
+        # random spanning-tree-ish edge list
+        perm = rng.permutation(n)
+        ea = perm[:-1]
+        eb = np.array([perm[rng.integers(0, i + 1)] for i in range(n - 1)])
+        w = rng.exponential(1.0, size=n - 1)
+        if trial % 3 == 0:
+            w[rng.integers(0, n - 1)] = np.inf  # exercise the inf branches
+        if trial % 4 == 0:
+            w[rng.integers(0, n - 1)] = 0.0
+        got = dbcv_relative_validity(ea, eb, w, labels)
+        want = _dbcv_loop_reference(ea, eb, w, labels)
+        assert got == pytest.approx(want), f"trial {trial}"
+
+
+def test_dbcv_profile_through_estimator(blobs):
+    """The estimator range query exercises the fixed branch end-to-end."""
+    from repro.api import MultiHDBSCAN
+
+    x, _ = blobs
+    est = MultiHDBSCAN(kmax=10).fit(x)
+    prof = est.dbcv_profile()
+    assert [r["mpts"] for r in prof] == est.mpts_values_
+    assert all(np.isfinite(r["dbcv"]) and -1.0 <= r["dbcv"] <= 1.0 for r in prof)
+    # mpts=2 shatters the blobs; a mid-range level should beat it
+    best = max(prof, key=lambda r: r["dbcv"])
+    assert best["dbcv"] >= [r for r in prof if r["mpts"] == 2][0]["dbcv"]

@@ -1,0 +1,222 @@
+"""Clustering serve engine: correctness under concurrency, micro-batching,
+LRU bounds — plus the batched-LM regression tests (per-request temperature,
+EOS masking)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import MultiHDBSCAN
+from repro.serve import ClusterServeEngine
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(41)
+    x = np.concatenate([
+        rng.normal((0, 0), 0.3, size=(90, 2)),
+        rng.normal((4, 0), 0.5, size=(90, 2)),
+        rng.normal((2, 4), 0.4, size=(70, 2)),
+    ]).astype(np.float32)
+    return x
+
+
+@pytest.fixture(scope="module")
+def engine(dataset):
+    est = MultiHDBSCAN(kmax=8).fit(dataset)
+    eng = ClusterServeEngine(est, max_batch=32, hierarchy_cache_size=3)
+    yield eng
+    eng.close()
+
+
+def test_requires_fitted_estimator():
+    with pytest.raises(RuntimeError, match="fitted"):
+        ClusterServeEngine(MultiHDBSCAN(kmax=4))
+
+
+def test_serve_predict_matches_estimator(dataset, engine):
+    """The serve smoke: engine answers == direct estimator answers."""
+    q = dataset[:9] + 0.02
+    direct = engine.estimator.approximate_predict(q, mpts=8)
+    lab, prob = engine.predict(q, mpts=8)
+    np.testing.assert_array_equal(lab, direct[0])
+    np.testing.assert_allclose(prob, direct[1])
+
+    res = engine.predict(q)  # full range
+    direct_all = engine.estimator.approximate_predict(q)
+    np.testing.assert_array_equal(res.labels, direct_all.labels)
+
+
+def test_concurrent_clients_are_microbatched(dataset, engine):
+    """Many concurrent single-row clients: every answer correct, and the
+    engine fuses them into far fewer device batches than requests."""
+    rng = np.random.default_rng(43)
+    queries = [
+        (dataset[rng.integers(len(dataset))] + 0.01).astype(np.float32)
+        for _ in range(24)
+    ]
+    direct = engine.estimator.approximate_predict(np.stack(queries), mpts=6)
+
+    before = engine.stats()
+    results: dict[int, tuple] = {}
+
+    def client(i):
+        results[i] = engine.predict(queries[i], mpts=6)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(24)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    after = engine.stats()
+
+    for i in range(24):
+        lab, prob = results[i]
+        assert lab[0] == direct[0][i]
+        assert prob[0] == pytest.approx(direct[1][i])
+    n_batches = after["n_batches"] - before["n_batches"]
+    assert n_batches < 24, f"no micro-batching: {n_batches} batches for 24 requests"
+    assert after["n_queries"] - before["n_queries"] == 24
+
+
+def test_mixed_mpts_requests_share_one_batch(dataset, engine):
+    """Riders asking for different levels still fuse into one device pass."""
+    before = engine.stats()
+    futs = [
+        engine.submit_predict(dataset[:2] + 0.01, mpts=m) for m in (4, 5, 6, 7)
+    ]
+    outs = [f.result(timeout=60) for f in futs]
+    for m, (lab, _) in zip((4, 5, 6, 7), outs):
+        direct = engine.estimator.approximate_predict(dataset[:2] + 0.01, mpts=m)
+        np.testing.assert_array_equal(lab, direct[0])
+    assert engine.stats()["n_batches"] - before["n_batches"] <= 2
+
+
+def test_labels_profile_and_selection_override(dataset, engine):
+    est = engine.estimator
+    np.testing.assert_array_equal(engine.labels(8), est.labels_for(8))
+    leaf = engine.labels(8, cluster_selection_method="leaf")
+    assert leaf.max() >= est.labels_for(8).max()  # leaf refines eom
+    # the override never disturbs the estimator's own configuration
+    np.testing.assert_array_equal(engine.labels(8), est.labels_for(8))
+
+    prof = engine.profile()
+    assert [r["mpts"] for r in prof] == est.mpts_values_
+    dbcv = engine.dbcv_profile()
+    assert all(-1.0 <= r["dbcv"] <= 1.0 for r in dbcv)
+    m = engine.membership(5)
+    np.testing.assert_array_equal(m.labels, est.labels_for(5))
+
+
+def test_hierarchy_cache_is_lru_bounded(dataset, engine):
+    for m in engine.estimator.mpts_values_:
+        engine.labels(m)
+    cache = engine.estimator._hierarchy_cache
+    assert len(cache) <= 3
+    # most recently served levels survive
+    assert engine.estimator.mpts_values_[-1] in cache
+    # evicted levels still answer correctly (re-extracted on demand)
+    lab2 = engine.labels(2)
+    np.testing.assert_array_equal(lab2, engine.estimator.labels_for(2))
+
+
+def test_invalid_requests_fail_alone_at_submit_time(dataset, engine):
+    """A malformed request is rejected before enqueueing: it must never
+    reach the micro-batcher, where its failure would poison co-batched
+    strangers' futures."""
+    with pytest.raises(KeyError, match="not in computed range"):
+        engine.submit_predict(dataset[:1], mpts=99)
+    with pytest.raises(ValueError, match="features"):
+        engine.submit_predict(np.zeros((1, 7), np.float32), mpts=8)
+    bad = dataset[:1].copy()
+    bad[0, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        engine.submit_predict(bad, mpts=8)
+    # a healthy rider submitted right after still succeeds
+    lab, _ = engine.predict(dataset[:1], mpts=8)
+    assert lab.shape == (1,)
+
+
+def test_engine_rejects_degenerate_cache_size(dataset):
+    est = MultiHDBSCAN(kmax=4).fit(dataset)
+    with pytest.raises(ValueError, match="hierarchy_cache_size"):
+        ClusterServeEngine(est, hierarchy_cache_size=0)
+
+
+def test_closed_engine_rejects_requests(dataset):
+    est = MultiHDBSCAN(kmax=4).fit(dataset)
+    eng = ClusterServeEngine(est)
+    eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.predict(dataset[:1])
+
+
+def test_stats_shape(engine):
+    s = engine.stats()
+    for k in ("n_requests", "n_queries", "n_batches", "p50_ms", "p95_ms",
+              "queries_per_s", "mean_batch"):
+        assert k in s
+    assert s["p95_ms"] >= s["p50_ms"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Batched LM engine regressions (serve/lm.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm_engine():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.lm import Engine
+
+    cfg = get_config("qwen2_1_5b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, max_len=64)
+
+
+def test_lm_mixed_temperature_batch(lm_engine):
+    """Regression: a batch must apply each request's OWN temperature — the
+    old loop broadcast requests[0].temperature, so a greedy request batched
+    behind a hot one silently got sampled."""
+    from repro.serve.lm import GenRequest
+
+    greedy = GenRequest(prompt=np.array([0, 5, 9], np.int32), max_new_tokens=8,
+                        temperature=0.0)
+    hot = GenRequest(prompt=np.array([0, 7], np.int32), max_new_tokens=8,
+                     temperature=1.5)
+    solo = lm_engine.generate([greedy], seed=0)[0]
+    m1 = lm_engine.generate([hot, greedy], seed=1)
+    m2 = lm_engine.generate([hot, greedy], seed=2)
+    # the greedy row is deterministic regardless of batch company and seed
+    np.testing.assert_array_equal(m1[1], solo)
+    np.testing.assert_array_equal(m2[1], solo)
+    # while the hot row really is sampling
+    assert not np.array_equal(m1[0], m2[0])
+
+
+def test_lm_eos_masking_and_stats(lm_engine):
+    """Regression: rows that hit EOS keep emitting EOS (no post-EOS junk)
+    and the throughput stats count only real generated tokens."""
+    from repro.serve.lm import GenRequest
+
+    base = GenRequest(prompt=np.array([0, 5, 9], np.int32), max_new_tokens=8,
+                      temperature=0.0)
+    solo = lm_engine.generate([base], seed=0)[0]
+    eos_tok = int(solo[0])  # make the first generated token the EOS
+
+    early = GenRequest(prompt=np.array([0, 5, 9], np.int32), max_new_tokens=8,
+                       temperature=0.0, eos_id=eos_tok)
+    # same prompt length as `early`, so the solo run sees identical padding
+    other = GenRequest(prompt=np.array([0, 7, 4], np.int32), max_new_tokens=8,
+                       temperature=0.0)
+    outs = lm_engine.generate([early, other], seed=0)
+    stats = lm_engine.last_stats
+    assert len(outs[0]) == 1 and outs[0][0] == eos_tok
+    assert stats["tokens"] == len(outs[0]) + len(outs[1])
+    assert stats["tok_per_s"] > 0
+    # the laggard row is unaffected by its finished neighbour
+    np.testing.assert_array_equal(outs[1], lm_engine.generate([other], seed=0)[0])

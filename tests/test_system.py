@@ -67,7 +67,7 @@ def test_serving_engine_generates():
 
     from repro.configs import get_config
     from repro.models import init_params
-    from repro.serve.engine import Engine, GenRequest
+    from repro.serve.lm import Engine, GenRequest
 
     cfg = get_config("qwen2_1_5b").reduced()
     params, _ = init_params(cfg, jax.random.PRNGKey(0))

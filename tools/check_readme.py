@@ -1,5 +1,8 @@
 """Docs sanity check: README python blocks must parse, and the ones that
-exercise the public API must actually run.
+exercise the public API must actually run.  Also guards the
+BENCH_pipeline.json schema: perf-trajectory tooling diffs that file across
+commits, so a benchmark edit that silently drops a field (provenance, the
+serve section) must fail CI here, not corrupt the trajectory later.
 
 Every ```python fenced block in README.md is compiled; blocks that import
 only from the public surface (repro, numpy) are executed in a shared
@@ -10,6 +13,7 @@ namespace so the quickstart is guaranteed to work as printed.
 
 from __future__ import annotations
 
+import json
 import re
 import sys
 from pathlib import Path
@@ -17,9 +21,42 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
+# append-only field contract (see benchmarks/run.py::pipeline_bench): a key
+# may be ADDED with a schema_version bump, never renamed or removed
+BENCH_REQUIRED_FIELDS = [
+    "schema_version",
+    "config.n", "config.d", "config.kmax", "config.backend", "config.plan",
+    "provenance.git_sha", "provenance.config_hash", "provenance.warm_reps",
+    "multi.knn", "multi.rng_build", "multi.mst_range", "multi.hierarchy",
+    "multi.total",
+    "baseline.knn", "baseline.mst", "baseline.hierarchy", "baseline.total",
+    "cold.multi_total", "cold.baseline_total",
+    "edges.rng", "edges.complete",
+    "speedup_vs_baseline",
+    "serve.batch", "serve.n_queries", "serve.p50_ms", "serve.p95_ms",
+    "serve.queries_per_s", "serve.mean_batch",
+]
+
 
 def blocks(md: str) -> list[str]:
     return re.findall(r"```python\n(.*?)```", md, flags=re.DOTALL)
+
+
+def check_bench_schema(path: Path) -> list[str]:
+    """Missing-field paths of the tracked benchmark file (empty = ok)."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name} unreadable: {e}"]
+    missing = []
+    for dotted in BENCH_REQUIRED_FIELDS:
+        node = doc
+        for part in dotted.split("."):
+            if not isinstance(node, dict) or part not in node:
+                missing.append(dotted)
+                break
+            node = node[part]
+    return missing
 
 
 def main() -> int:
@@ -44,11 +81,19 @@ def main() -> int:
             print(f"FAIL: README block {i} raised {type(e).__name__}: {e}")
             return 1
 
+    missing = check_bench_schema(ROOT / "BENCH_pipeline.json")
+    if missing:
+        print(
+            "FAIL: BENCH_pipeline.json lost schema fields "
+            f"(append-only contract): {missing}"
+        )
+        return 1
+
     import repro
     import repro.api  # noqa: F401  (public surface must import)
 
     print(f"ok: {len(found)} README blocks parsed, {n_run} executed; "
-          f"repro {repro.__version__} imports")
+          f"repro {repro.__version__} imports; BENCH_pipeline.json schema ok")
     return 0
 
 
