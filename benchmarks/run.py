@@ -81,6 +81,11 @@ def main() -> None:
         f"serve/predict,{srv['p50_ms'] * 1e3:.0f},"
         f"p95_ms={srv['p95_ms']};qps={srv['queries_per_s']}"
     )
+    art = pipeline["artifact"]
+    print(
+        f"artifact/save_load,{art['save_ms'] * 1e3:.0f},"
+        f"load_ms={art['load_ms']};bytes={art['bytes']}"
+    )
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
     with open(out, "w") as f:
         json.dump(pipeline, f, indent=1)
@@ -119,8 +124,10 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
       + (v2) provenance{git_sha,config_hash,warm_reps}
       + (v3) serve{batch,n_queries,p50_ms,p95_ms,queries_per_s,mean_batch}
         — warm out-of-sample latency through serve.ClusterServeEngine
+      + (v4) artifact{save_ms,load_ms,bytes} — FittedModel save/load cost
+        at this n (the refit-free serve-worker boot path)
         (tools/check_readme.py fails the docs lane if any of these fields,
-        or the provenance block, ever goes missing)
+        the provenance block, or the artifact block ever goes missing)
 
     ``provenance.config_hash`` is the sha256 of the canonical config dict, so
     the perf trajectory across commits is attributable: rows only compare
@@ -161,7 +168,7 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
         if w_b < wall_base:
             tb, wall_base = t_b, w_b
 
-    serve = serve_bench(x, kmax=kmax, plan=plan, seed=seed)
+    serve, artifact = serve_bench(x, kmax=kmax, plan=plan, seed=seed)
 
     config = {
         "n": n, "d": d, "kmax": kmax,
@@ -169,7 +176,7 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
     }
     stage = lambda t, k: round(t.get(k, 0.0), 4)  # noqa: E731
     return {
-        "schema_version": 3,
+        "schema_version": 4,
         "config": config,
         "provenance": {
             "git_sha": _git_sha(),
@@ -201,18 +208,53 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
         },
         "speedup_vs_baseline": round(wall_base / max(wall_multi, 1e-9), 2),
         "serve": serve,
+        "artifact": artifact,
+    }
+
+
+def artifact_bench(model, reps: int = 3) -> dict:
+    """FittedModel save/load cost: best-of-``reps`` wall ms + artifact bytes.
+
+    This is the serve-worker boot path (fit once anywhere, ``load()``
+    everywhere), so load is measured cold-cache per rep: a fresh
+    ``FittedModel.load`` from disk each time.
+    """
+    import os
+    import tempfile
+    import time
+
+    from repro.api import FittedModel
+
+    save_s = load_s = float("inf")
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "model.fitted.npz")
+        for _ in range(max(1, reps)):
+            t0 = time.monotonic()
+            model.save(path)
+            save_s = min(save_s, time.monotonic() - t0)
+        nbytes = os.path.getsize(path)
+        for _ in range(max(1, reps)):
+            t0 = time.monotonic()
+            FittedModel.load(path)
+            load_s = min(load_s, time.monotonic() - t0)
+    return {
+        "save_ms": round(save_s * 1e3, 2),
+        "load_ms": round(load_s * 1e3, 2),
+        "bytes": int(nbytes),
     }
 
 
 def serve_bench(
     x, *, kmax: int, plan, seed: int = 0, batch: int = 64, waves: int = 8
-) -> dict:
-    """Warm out-of-sample serving latency through the ClusterServeEngine.
+) -> tuple[dict, dict]:
+    """Warm out-of-sample serving latency through the ClusterServeEngine,
+    plus the artifact save/load cost of the same fitted state.
 
     One engine over a fitted estimator; ``waves`` bursts of ``batch``
     concurrent single-query clients (the micro-batcher fuses each burst
     into device passes).  The first wave is warmup (compiles the attach
     program family) and is excluded from the reported percentiles.
+    Returns ``(serve_section, artifact_section)``.
     """
     import numpy as np
 
@@ -221,6 +263,7 @@ def serve_bench(
 
     rng = np.random.default_rng(seed + 1)
     est = MultiHDBSCAN(kmax=kmax, plan=plan).fit(x)
+    artifact = artifact_bench(est.model_)
     queries = (
         x[rng.choice(len(x), size=waves * batch)]
         + rng.normal(0, 0.05, size=(waves * batch, x.shape[1]))
@@ -245,7 +288,7 @@ def serve_bench(
         "p95_ms": stats["p95_ms"],
         "queries_per_s": stats["queries_per_s"],
         "mean_batch": stats["mean_batch"],
-    }
+    }, artifact
 
 
 if __name__ == "__main__":

@@ -47,7 +47,7 @@ def explore(n: int, kmax: int):
     candidates = [r for r in est.mpts_profile() if r["n_clusters"] <= len(x) ** 0.5]
     best = max(candidates, key=lambda r: r["total_stability"])
     print(f"\nhighest-stability level: mpts={best['mpts']} "
-          f"({best['n_clusters']} clusters) — labels via est.labels_for(mpts).")
+          f"({best['n_clusters']} clusters) — labels via est.select(mpts).labels.")
     print("low mpts isolates the tight twins; high mpts merges them and")
     print("stabilizes the diffuse blob — one fit exposes both readings.")
 

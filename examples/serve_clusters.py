@@ -1,18 +1,24 @@
 """Serve clustering queries from one fitted multi-density state.
 
-Fits once, then drives concurrent out-of-sample prediction traffic through
-the micro-batching ClusterServeEngine and prints the latency profile.
+Fits once, saves the fitted state as an artifact, boots a serve worker
+from the artifact (the refit-free scale-out path), then drives concurrent
+out-of-sample prediction traffic through the micro-batching
+ClusterServeEngine and prints the latency profile.
 
   PYTHONPATH=src python examples/serve_clusters.py
 """
 
+import os
 import sys
+import tempfile
 import threading
+import time
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro.api import FittedModel, SelectionPolicy
 from repro.serve import ClusterServeEngine
 
 
@@ -24,7 +30,20 @@ def main():
         rng.normal((2, 4), 0.8, size=(300, 2)),
     ]).astype(np.float32)
 
-    with ClusterServeEngine.fit(x, kmax=16) as eng:
+    # fit ONCE, persist the artifact: every serve worker loads it in ~ms
+    t0 = time.monotonic()
+    model = FittedModel.fit(x, kmax=16)
+    t_fit = time.monotonic() - t0
+    path = os.path.join(tempfile.mkdtemp(), "clusters.fitted.npz")
+    model.save(path)
+    t0 = time.monotonic()
+    with ClusterServeEngine.load(
+        path, expect_config_hash=model.config_hash
+    ) as eng:
+        t_boot = time.monotonic() - t0
+        print(f"fit {t_fit:.2f}s once -> worker boots from "
+              f"{os.path.getsize(path) / 1e6:.1f} MB artifact in {t_boot * 1e3:.0f} ms")
+
         # a burst of concurrent single-query clients, mixed density levels
         queries = x[rng.choice(len(x), size=128)] + rng.normal(0, 0.05, (128, 2)).astype(np.float32)
         results = {}
@@ -40,9 +59,12 @@ def main():
 
         labeled = sum(1 for lab, _ in results.values() if lab[0] >= 0)
         print(f"128 concurrent queries: {labeled} assigned to clusters")
-        print("per-request selection knob:",
+        leaf = SelectionPolicy(method="leaf")
+        hybrid = SelectionPolicy(method="leaf", epsilon=0.8)
+        print("per-request selection policy:",
               f"eom -> {eng.labels(8).max() + 1} clusters,",
-              f"leaf -> {eng.labels(8, cluster_selection_method='leaf').max() + 1}")
+              f"leaf -> {eng.labels(8, policy=leaf).max() + 1},",
+              f"leaf+eps(0.8) -> {eng.labels(8, policy=hybrid).max() + 1}")
         print("engine stats:", eng.stats())
 
 

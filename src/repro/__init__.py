@@ -1,16 +1,23 @@
 """repro: multi-density clustering hierarchies (RNG-HDBSCAN*) at pod scale."""
 
-__version__ = "1.2.0"
+__version__ = "1.3.0"
 
-__all__ = ["MultiHDBSCAN", "Plan", "resolve_plan", "__version__"]
+__all__ = [
+    "FittedModel",
+    "MultiHDBSCAN",
+    "Plan",
+    "SelectionPolicy",
+    "resolve_plan",
+    "__version__",
+]
 
 
 def __getattr__(name):
     # lazy: `import repro` stays cheap; `repro.MultiHDBSCAN` pulls in jax
-    if name == "MultiHDBSCAN":
-        from .api import MultiHDBSCAN
+    if name in ("MultiHDBSCAN", "FittedModel", "SelectionPolicy"):
+        from . import api
 
-        return MultiHDBSCAN
+        return getattr(api, name)
     if name in ("Plan", "resolve_plan"):
         from . import engine
 

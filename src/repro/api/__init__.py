@@ -1,17 +1,36 @@
-"""Public estimator API for the multi-density clustering engine.
+"""Public API for the multi-density clustering engine.
 
-    from repro.api import MultiHDBSCAN
+Three layers (see docs/architecture.md "Public API & artifacts"):
 
+    from repro.api import FittedModel, SelectionPolicy, MultiHDBSCAN
+
+    # 1) the fitted artifact — fit once, save, load anywhere, no refit
+    model = FittedModel.fit(x, kmax=32)
+    model.save("blobs.fitted.npz")
+    model = FittedModel.load("blobs.fitted.npz")     # milliseconds
+
+    # 2) Clustering query views — selection is per-query state
+    c = model.select(8)                              # default policy (eom)
+    c.labels, c.probabilities, c.exemplars, c.condensed_tree
+    leaf = model.select(8, SelectionPolicy(method="leaf", epsilon=0.25))
+    every_level = model.select_all()                 # one device pass
+
+    labels, probs = model.approximate_predict(q, mpts=8)   # out-of-sample
+
+    # 3) sklearn-style estimator wrapper over the same model
     est = MultiHDBSCAN(kmax=32).fit(x)
-    labels = est.labels_for(mpts=8)        # lazily extracted, cached
-    tree = est.hierarchy_for(mpts=8)       # condensed tree + stabilities
-    probs = est.probabilities_for(mpts=8)  # per-point membership strength
-    profile = est.mpts_profile()           # the whole density range at a glance
-
-    labels, probs = est.approximate_predict(q, mpts=8)   # out-of-sample
-    all_levels = est.approximate_predict(q)              # ... every mpts at once
+    est.model_.select(8).labels                      # the model is est.model_
 """
 
 from .estimator import Membership, MultiHDBSCAN
+from .model import ArtifactError, Clustering, FittedModel
+from .selection import SelectionPolicy
 
-__all__ = ["Membership", "MultiHDBSCAN"]
+__all__ = [
+    "ArtifactError",
+    "Clustering",
+    "FittedModel",
+    "Membership",
+    "MultiHDBSCAN",
+    "SelectionPolicy",
+]

@@ -1,33 +1,31 @@
-"""`MultiHDBSCAN`: sklearn-style front door for the multi-density engine.
+"""`MultiHDBSCAN`: sklearn-style front door over a :class:`FittedModel`.
 
 One ``fit`` buys the whole mpts range (the paper's "hundred hierarchies for
-the cost of ~2 HDBSCAN* runs"): a single kNN pass, a single RNG^kmax, one
-batched Borůvka over every reweighting.  Everything *per-mpts* — the
-dendrogram condensation, cluster selection, labels — is extracted lazily and
-cached: the first extraction request runs the batched device single-linkage
-for the full range (core.linkage), after which each ``labels_for(mpts)`` is
-a cheap vectorized host pass.
+the cost of ~2 HDBSCAN* runs").  Since the FittedModel artifact layer, the
+estimator is a thin sklearn-compatible wrapper: ``fit`` builds a
+``FittedModel`` (reachable as ``est.model_``) and every query delegates to
+it — ``est.model_.select(mpts, policy)`` is the first-class query surface,
+and ``est.model_.save(path)`` / ``FittedModel.load(path)`` move the fitted
+state between processes without a refit.
 
-Estimator surface (in the spirit of McInnes & Healy's hdbscan API, with
-Malzer & Baum-style selection options):
-
-  fit(X) / fit_predict(X, mpts=...)
-  labels_for(mpts) / hierarchy_for(mpts) / probabilities_for(mpts)
-  mpts_profile()  — the paper's "which density level reveals which structure"
-                    exploration as one query
+The original per-level accessors (``labels_for`` / ``hierarchy_for`` /
+``membership_for`` / ``probabilities_for``) remain as deprecation shims for
+one release: they answer exactly as before but emit a ``FutureWarning``
+pointing at the ``select`` surface.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Sequence
 
 import numpy as np
 
-from .. import engine
-from ..core import dbcv as dbcv_mod
 from ..core import multi, predict
+from .model import FittedModel
+from .selection import SelectionPolicy
 
 
 @dataclasses.dataclass
@@ -38,6 +36,15 @@ class Membership:
     labels: np.ndarray         # (n,) int64, -1 = noise
     probabilities: np.ndarray  # (n,) float64 in [0, 1], 0 for noise
     lambdas: np.ndarray        # (n,) float64 departure lambda (0 for noise)
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"MultiHDBSCAN.{old} is deprecated and will be removed next release; "
+        f"use {new} instead",
+        FutureWarning,
+        stacklevel=3,
+    )
 
 
 class MultiHDBSCAN:
@@ -57,6 +64,10 @@ class MultiHDBSCAN:
         Condensation threshold; default per-mpts ``max(2, mpts)``.
     cluster_selection_method : {"eom", "leaf"}
         Excess-of-mass (HDBSCAN* default) or condensed-tree leaves.
+    cluster_selection_epsilon : float
+        Malzer & Baum's hybrid threshold: selected clusters born at a
+        distance below epsilon merge upward into their first epsilon-stable
+        ancestor.  0.0 (default) disables it.
     allow_single_cluster : bool
         Permit the root as a selected cluster.
     variant : {"rng_ss", "rng_star", "rng"}
@@ -78,11 +89,11 @@ class MultiHDBSCAN:
         path, "mesh" errors rather than silently degrading.  Pass a
         pre-built ``engine.Plan`` to pin every chunk/tile size explicitly.
     max_cached_hierarchies : int, optional
-        Bound on the per-mpts extraction cache (LRU eviction).  ``None``
-        (default) keeps every requested level — right for exploration;
-        long-lived serving processes (``serve.ClusterServeEngine``) set a
-        bound so a hostile query mix cannot hold all R condensed trees
-        resident.
+        Bound on the per-(mpts, policy) extraction cache (LRU eviction).
+        ``None`` (default) keeps every requested level — right for
+        exploration; long-lived serving processes
+        (``serve.ClusterServeEngine``) set a bound so a hostile query mix
+        cannot hold all R condensed trees resident.
     """
 
     def __init__(
@@ -93,6 +104,7 @@ class MultiHDBSCAN:
         mpts_values: Sequence[int] | None = None,
         min_cluster_size: int | None = None,
         cluster_selection_method: str = "eom",
+        cluster_selection_epsilon: float = 0.0,
         allow_single_cluster: bool = False,
         variant: str = "rng_star",
         backend: str | None = None,
@@ -115,6 +127,7 @@ class MultiHDBSCAN:
         self.mpts_values = list(mpts_values) if mpts_values is not None else None
         self.min_cluster_size = min_cluster_size
         self.cluster_selection_method = cluster_selection_method
+        self.cluster_selection_epsilon = cluster_selection_epsilon
         self.allow_single_cluster = allow_single_cluster
         self.variant = variant
         self.backend = backend
@@ -125,140 +138,170 @@ class MultiHDBSCAN:
                 f"max_cached_hierarchies must be >= 1 or None; "
                 f"got {max_cached_hierarchies}"
             )
-        self.max_cached_hierarchies = max_cached_hierarchies
+        self._max_cached_hierarchies = max_cached_hierarchies
+        self._model: FittedModel | None = None
+        # eager policy construction: bad selection knobs fail HERE, not at fit
+        self._selection_policy()
 
-        self._msts: multi.MultiMSTResult | None = None
-        self._X: np.ndarray | None = None
-        self._linkage: multi.LinkageRange | None = None
-        self._hierarchy_cache: collections.OrderedDict[int, multi.HierarchyResult] = (
-            collections.OrderedDict()
+    def _selection_policy(self) -> SelectionPolicy:
+        """The estimator's configuration as a SelectionPolicy."""
+        return SelectionPolicy(
+            method=self.cluster_selection_method,
+            epsilon=self.cluster_selection_epsilon,
+            allow_single_cluster=self.allow_single_cluster,
+            min_cluster_size=self.min_cluster_size,
         )
-        self._walk_cache: dict[int, predict.WalkTable] = {}
 
     # -- fitting -----------------------------------------------------------
 
     def fit(self, X) -> "MultiHDBSCAN":
         """Compute the shared graph and every per-mpts MST (no extraction)."""
-        X = np.asarray(X)
-        if X.ndim != 2:
-            raise ValueError(f"X must be 2-d (n_samples, n_features); got {X.shape}")
-        if X.shape[0] <= self.kmax:
-            raise ValueError(
-                f"n_samples must exceed kmax; got n={X.shape[0]}, kmax={self.kmax}"
-            )
-        if not (np.issubdtype(X.dtype, np.number) or X.dtype == np.bool_):
-            raise ValueError(f"X must be numeric; got dtype {X.dtype}")
-        # NaN/inf would otherwise flow unchecked into the host WSPD
-        # fair-split tree (poisoning bbox splits) and the f32 tie-epsilon
-        # machinery (NaN never compares, silently dropping candidates) —
-        # reject here with a usable message.  Duplicated points are legal:
-        # the tie tolerance keeps every tied SBCN/MST choice, and the fused
-        # cascade falls back to the dense slot path under mass ties.
-        bad = ~np.isfinite(X)
-        if bad.any():
-            rows = np.flatnonzero(bad.any(axis=1))
-            raise ValueError(
-                f"X contains {int(bad.sum())} non-finite value(s) "
-                f"(NaN or inf) in {len(rows)} row(s), first at row "
-                f"{int(rows[0])}; clean or impute before fit()"
-            )
-        # resolve the execution plan ONCE: backend + mesh placement + sizes
-        self.plan_ = engine.resolve_plan(
-            self.plan, backend=self.backend, mesh=self.mesh
-        )
-        self._msts = multi.fit_msts(
+        # refit hygiene: clear every fitted (trailing-underscore) attribute
+        # from a prior fit/fit_predict FIRST, so a failed refit can't leave
+        # a half-stale estimator (e.g. labels_ from the previous dataset)
+        for name in [
+            k for k in list(vars(self)) if k.endswith("_") and not k.startswith("_")
+        ]:
+            delattr(self, name)
+        self._model = None
+        self._model = FittedModel.fit(
             X,
             self.kmax,
             kmin=self.kmin,
-            variant=self.variant,
             mpts_values=self.mpts_values,
-            plan=self.plan_,
+            policy=self._selection_policy(),
+            variant=self.variant,
+            backend=self.backend,
+            mesh=self.mesh,
+            plan=self.plan,
+            max_cached_hierarchies=self._max_cached_hierarchies,
         )
-        self._X = X  # retained for out-of-sample queries (approximate_predict)
-        self._linkage = None
-        self._hierarchy_cache = collections.OrderedDict()
-        self._walk_cache = {}
-        self.n_features_in_ = X.shape[1]
-        self.n_samples_ = X.shape[0]
-        self.mpts_values_ = list(self._msts.mpts_values)
-        self.timings_ = dict(self._msts.timings)
+        self.plan_ = self._model.plan
+        self.n_features_in_ = self._model.n_features
+        self.n_samples_ = self._model.n_samples
+        self.mpts_values_ = self._model.mpts_values
+        self.timings_ = dict(self._model.msts.timings)
         return self
 
     def fit_predict(self, X, mpts: int | None = None) -> np.ndarray:
         """fit + labels at one density level (default: the largest, kmax)."""
         self.fit(X)
-        labels = self.labels_for(mpts if mpts is not None else self.mpts_values_[-1])
+        labels = self.model_.select(
+            mpts if mpts is not None else self.mpts_values_[-1]
+        ).labels
         self.labels_ = labels
         return labels
 
-    # -- lazy batched extraction ------------------------------------------
+    # -- the new surface ---------------------------------------------------
+
+    @property
+    def model_(self) -> FittedModel:
+        """The fitted artifact: ``select`` / ``select_all`` / ``save`` live here."""
+        if self._model is None:
+            raise RuntimeError(
+                "MultiHDBSCAN instance is not fitted yet; call fit(X)"
+            )
+        return self._model
+
+    def select(self, mpts: int, policy: SelectionPolicy | None = None):
+        """The :class:`~repro.api.model.Clustering` view at one density level."""
+        return self.model_.select(mpts, policy)
+
+    def select_all(self, policy: SelectionPolicy | None = None):
+        """Every fitted density level (one batched device linkage pass)."""
+        return self.model_.select_all(policy)
+
+    def save(self, path: str) -> str:
+        """Persist the fitted state as an artifact (``FittedModel.save``)."""
+        return self.model_.save(path)
+
+    # -- legacy internal surface (kept for compatibility) ------------------
+
+    @property
+    def max_cached_hierarchies(self) -> int | None:
+        return self._max_cached_hierarchies
+
+    @max_cached_hierarchies.setter
+    def max_cached_hierarchies(self, value: int | None) -> None:
+        if value is not None and value < 1:
+            raise ValueError(
+                f"max_cached_hierarchies must be >= 1 or None; got {value}"
+            )
+        self._max_cached_hierarchies = value
+        if self._model is not None:
+            self._model.max_cached_hierarchies = value
+
+    @property
+    def _msts(self) -> multi.MultiMSTResult | None:
+        return None if self._model is None else self._model.msts
+
+    @property
+    def _X(self) -> np.ndarray | None:
+        return None if self._model is None else self._model.X
+
+    @property
+    def _linkage(self) -> multi.LinkageRange | None:
+        return None if self._model is None else self._model._linkage
+
+    @property
+    def _hierarchy_cache(self) -> "collections.OrderedDict[int, multi.HierarchyResult]":
+        """Legacy view of the model's cache: default-policy entries by mpts."""
+        if self._model is None:
+            return collections.OrderedDict()
+        default = self._model.default_policy
+        return collections.OrderedDict(
+            (mpts, h)
+            for (mpts, pol), h in self._model._cache.items()
+            if pol == default
+        )
+
+    @property
+    def _walk_cache(self) -> dict[int, predict.WalkTable]:
+        if self._model is None:
+            return {}
+        return self._model._walk_cache(self._model.default_policy)
 
     def _check_fitted(self) -> multi.MultiMSTResult:
-        if self._msts is None:
-            raise RuntimeError("MultiHDBSCAN instance is not fitted yet; call fit(X)")
-        return self._msts
+        return self.model_.msts
 
     def _ensure_linkage(self) -> multi.LinkageRange:
-        """All dendrograms for the range in ONE device program, on first need."""
-        msts = self._check_fitted()
-        if self._linkage is None:
-            self._linkage = multi.linkage_range(msts)
-        return self._linkage
+        return self.model_._ensure_linkage()
+
+    # -- deprecated per-level accessors (one release of FutureWarning) -----
 
     def hierarchy_for(self, mpts: int) -> multi.HierarchyResult:
-        """Condensed tree / stabilities / labels at one density level (cached).
-
-        The cache is LRU-bounded when ``max_cached_hierarchies`` is set (the
-        serving configuration); recently queried density levels stay hot,
-        cold ones re-extract from the resident ``LinkageRange`` on demand.
-        """
-        msts = self._check_fitted()
-        if mpts in self._hierarchy_cache:
-            self._hierarchy_cache.move_to_end(mpts)
-        else:
-            self._hierarchy_cache[mpts] = multi.extract_one_from_linkage(
-                msts,
-                self._ensure_linkage(),
-                msts.row_of(mpts),
-                min_cluster_size=self.min_cluster_size,
-                allow_single_cluster=self.allow_single_cluster,
-                cluster_selection_method=self.cluster_selection_method,
-            )
-            bound = self.max_cached_hierarchies
-            while bound is not None and len(self._hierarchy_cache) > bound:
-                evicted, _ = self._hierarchy_cache.popitem(last=False)
-                self._walk_cache.pop(evicted, None)
-        return self._hierarchy_cache[mpts]
+        """Deprecated: use ``est.model_.select(mpts).hierarchy``."""
+        _deprecated("hierarchy_for(mpts)", "model_.select(mpts).hierarchy")
+        return self.model_.hierarchy(mpts)
 
     def labels_for(self, mpts: int) -> np.ndarray:
-        """Cluster labels (-1 = noise) at one density level (cached)."""
-        return self.hierarchy_for(mpts).labels
+        """Deprecated: use ``est.model_.select(mpts).labels``."""
+        _deprecated("labels_for(mpts)", "model_.select(mpts).labels")
+        return self.model_.hierarchy(mpts).labels
 
     def membership_for(self, mpts: int) -> Membership:
-        """Labels + membership probabilities + lambdas of the fitted points.
-
-        The per-point probability is hdbscan-style: the departure lambda of
-        the point relative to its cluster's deepest (finite) departure —
-        1.0 at the cluster core, tapering toward the edge, 0 for noise.
-        """
-        h = self.hierarchy_for(mpts)
+        """Deprecated: use ``est.model_.select(mpts)`` (same fields)."""
+        _deprecated("membership_for(mpts)", "model_.select(mpts)")
+        c = self.model_.select(mpts)
         return Membership(
             mpts=mpts,
-            labels=h.labels,
-            probabilities=predict.membership_probabilities(h),
-            lambdas=np.asarray(h.point_lambda),
+            labels=c.labels,
+            probabilities=c.probabilities,
+            lambdas=c.lambdas,
         )
 
     def probabilities_for(self, mpts: int) -> np.ndarray:
-        """Cluster membership strength of each fitted point at one level.
+        """Deprecated: use ``est.model_.select(mpts).probabilities``."""
+        _deprecated("probabilities_for(mpts)", "model_.select(mpts).probabilities")
+        return self.model_.select(mpts).probabilities
 
-        Values in [0, 1]; noise points score 0.  See ``membership_for`` for
-        the labels + lambdas alongside.
-        """
-        return self.membership_for(mpts).probabilities
+    # -- stable query surface (delegates to the model) ----------------------
 
     def approximate_predict(
-        self, Q, mpts: int | None = None
+        self,
+        Q,
+        mpts: int | None = None,
+        policy: SelectionPolicy | None = None,
     ) -> "tuple[np.ndarray, np.ndarray] | predict.PredictResult":
         """Out-of-sample assignment of a query batch (no refit).
 
@@ -271,23 +314,10 @@ class MultiHDBSCAN:
         With ``mpts`` given, returns ``(labels, probabilities)`` for that
         level (hdbscan-style).  With ``mpts=None``, returns the full
         :class:`~repro.core.predict.PredictResult` — (R, q) labels /
-        probabilities / lambdas / attachment neighbours.
+        probabilities / lambdas / attachment neighbours.  ``policy``
+        overrides the estimator's selection configuration per call.
         """
-        msts = self._check_fitted()
-        Q = np.asarray(Q)
-        predict.validate_queries(Q, self.n_features_in_)
-        res = predict.predict_range(
-            msts,
-            self._X,
-            Q,
-            self.hierarchy_for,
-            plan=self.plan_,
-            mpts_values=None if mpts is None else [mpts],
-            table_cache=self._walk_cache,
-        )
-        if mpts is None:
-            return res
-        return res.labels[0], res.probabilities[0]
+        return self.model_.approximate_predict(Q, mpts, policy)
 
     def dbcv_profile(self) -> list[dict]:
         """DBCV relative validity at every fitted density level.
@@ -297,36 +327,21 @@ class MultiHDBSCAN:
         standard fast approximation), so callers can rank density levels
         without ground truth.  Returns ``[{"mpts", "dbcv", "n_clusters"}]``.
         """
-        msts = self._check_fitted()
-        rows = []
-        for mpts in msts.mpts_values:
-            h = self.hierarchy_for(mpts)
-            rows.append({
-                "mpts": mpts,
-                "dbcv": dbcv_mod.dbcv_relative_validity(
-                    h.mst_ea, h.mst_eb, h.mst_w, h.labels
-                ),
-                "n_clusters": h.n_clusters,
-            })
-        return rows
+        return self.model_.dbcv_profile()
 
     def mst_for(self, mpts: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(ea, eb, w) MST edges under mutual reachability at this mpts."""
-        msts = self._check_fitted()
-        row = msts.row_of(mpts)
-        return msts.mst_ea[row], msts.mst_eb[row], msts.mst_w[row]
+        return self.model_.mst(mpts)
 
     @property
     def graph_(self):
         """The fitted RNG^kmax (RngGraph: edges, d2, variant, stats)."""
-        return self._check_fitted().graph
+        return self.model_.graph
 
     @property
     def n_graph_edges_(self) -> int:
         """Edge count of the shared RNG^kmax (vs n(n-1)/2 for the baseline)."""
-        return len(self.graph_.edges)
-
-    # -- range-level queries ----------------------------------------------
+        return self.model_.n_graph_edges
 
     def mpts_profile(self) -> list[dict]:
         """Stability-across-mpts summary: one row per density level.
@@ -338,26 +353,10 @@ class MultiHDBSCAN:
         lambda scale shifts with density), so treat it as a ranking aid, not
         an absolute score.
         """
-        msts = self._check_fitted()
-        rows = []
-        for mpts in msts.mpts_values:
-            h = self.hierarchy_for(mpts)
-            sizes = np.bincount(h.labels[h.labels >= 0], minlength=h.n_clusters)
-            selected_stab = sorted(
-                (h.stability.get(c, 0.0) for c in h.selected), reverse=True
-            )
-            rows.append({
-                "mpts": mpts,
-                "n_clusters": h.n_clusters,
-                "n_noise": int((h.labels == -1).sum()),
-                "cluster_sizes": sizes.tolist(),
-                "max_stability": float(selected_stab[0]) if selected_stab else 0.0,
-                "total_stability": float(sum(selected_stab)),
-            })
-        return rows
+        return self.model_.mpts_profile()
 
     def __repr__(self) -> str:
-        fitted = "" if self._msts is None else f", fitted n={self.n_samples_}"
+        fitted = "" if self._model is None else f", fitted n={self.n_samples_}"
         place = ""
         if getattr(self, "plan_", None) is not None:
             place = f", plan={self.plan_.describe()}"

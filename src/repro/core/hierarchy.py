@@ -295,21 +295,91 @@ def _extract_leaves(tree: CondensedTree, allow_single_cluster: bool) -> list[int
     return leaves
 
 
+def _epsilon_merge(
+    tree: CondensedTree,
+    selected: list[int],
+    epsilon: float,
+    allow_single_cluster: bool,
+) -> list[int]:
+    """Malzer & Baum's epsilon threshold over an already-selected set.
+
+    A selected cluster born at distance < epsilon (birth lambda >
+    1/epsilon) is merged upward into its first ancestor born at a distance
+    >= epsilon; clusters already epsilon-stable pass through.  Climbing
+    stops below the root unless ``allow_single_cluster`` (then the root
+    itself can absorb everything) — the hdbscan ``traverse_upwards``
+    convention.  Descendants of a kept ancestor are dropped, so the result
+    is again an antichain of the condensed tree.
+    """
+    if epsilon <= 0.0 or not selected:
+        return selected
+    cluster_rows = tree.child >= tree.n_points
+    parent_of = {
+        int(c): int(p)
+        for p, c in zip(tree.parent[cluster_rows], tree.child[cluster_rows])
+    }
+    birth = {
+        int(c): float(l)
+        for c, l in zip(tree.child[cluster_rows], tree.lam[cluster_rows])
+    }
+
+    def eps_of(c: int) -> float:
+        lam = birth.get(c, 0.0)  # the root is born at lambda 0 -> eps inf
+        return np.inf if lam <= 0.0 else 1.0 / lam
+
+    kept: set[int] = set()
+    for c in selected:
+        if eps_of(c) >= epsilon:
+            kept.add(c)
+            continue
+        cur = c
+        while True:
+            par = parent_of.get(cur)
+            if par is None:  # cur IS the root (only selectable w/ single ok)
+                kept.add(cur)
+                break
+            if par == tree.root and not allow_single_cluster:
+                kept.add(cur)  # closest-to-root node below the forbidden root
+                break
+            if eps_of(par) >= epsilon:
+                kept.add(par)
+                break
+            cur = par
+    # drop any kept cluster that has a kept strict ancestor
+    out = []
+    for c in sorted(kept):
+        anc = parent_of.get(c)
+        while anc is not None and anc not in kept:
+            anc = parent_of.get(anc)
+        if anc is None:
+            out.append(c)
+    return out
+
+
 def extract_clusters(
     tree: CondensedTree,
     stability: dict[int, float],
     *,
     allow_single_cluster: bool = False,
     cluster_selection_method: str = "eom",
+    cluster_selection_epsilon: float = 0.0,
 ) -> list[int]:
     """Cluster selection; returns selected condensed cluster ids.
 
     ``"eom"`` is FOSC bottom-up excess-of-mass (the HDBSCAN* default);
     ``"leaf"`` takes the leaves of the condensed tree — many small
-    fine-grained clusters, in the spirit of Malzer & Baum's hybrid selection.
+    fine-grained clusters.  A positive ``cluster_selection_epsilon`` then
+    applies Malzer & Baum's hybrid threshold on top of either method:
+    selected clusters born at a distance below epsilon are merged upward
+    into their first epsilon-stable ancestor (see ``_epsilon_merge``).
     """
     if cluster_selection_method == "leaf":
-        return _extract_leaves(tree, allow_single_cluster)
+        return _epsilon_merge(
+            tree,
+            _extract_leaves(tree, allow_single_cluster),
+            cluster_selection_epsilon,
+            allow_single_cluster,
+        )
     if cluster_selection_method != "eom":
         raise ValueError(
             f"cluster_selection_method must be 'eom' or 'leaf'; "
@@ -340,7 +410,12 @@ def extract_clusters(
                 stack.extend(children_of.get(k, []))
     if not allow_single_cluster:
         selected[tree.root] = False
-    return [c for c in clusters if selected[c]]
+    return _epsilon_merge(
+        tree,
+        [c for c in clusters if selected[c]],
+        cluster_selection_epsilon,
+        allow_single_cluster,
+    )
 
 
 def labels_for(tree: CondensedTree, selected: list[int]) -> tuple[np.ndarray, np.ndarray]:

@@ -267,6 +267,83 @@ def linkage_range(msts: MultiMSTResult) -> LinkageRange:
     )
 
 
+# -- artifact pack/unpack ----------------------------------------------------
+#
+# The fitted device state is host numpy by the time it lives on a
+# MultiMSTResult (every stage ends at a named engine.to_host point), so an
+# artifact is a flat dict of arrays plus a small JSON-able meta dict.  The
+# api.FittedModel save/load layer owns the file format; these two functions
+# own WHAT constitutes the fitted state, so a field added to MultiMSTResult
+# fails loudly here instead of silently vanishing from artifacts.
+
+
+def pack_msts(msts: MultiMSTResult) -> tuple[dict[str, np.ndarray], dict]:
+    """Split a MultiMSTResult into (arrays, meta) for serialization.
+
+    ``arrays`` values are host numpy (``engine.io.ensure_host`` guards
+    against device arrays sneaking in); ``meta`` is JSON-serializable.
+    """
+    arrays = {
+        "knn_d2": msts.knn_d2,
+        "knn_idx": msts.knn_idx,
+        "cd2": msts.cd2,
+        "mst_ea": msts.mst_ea,
+        "mst_eb": msts.mst_eb,
+        "mst_w": msts.mst_w,
+        "mpts_values": np.asarray(msts.mpts_values, np.int64),
+    }
+    meta: dict = {
+        "n": int(msts.n),
+        "kmax": int(msts.kmax),
+        "timings": {k: float(v) for k, v in msts.timings.items()},
+        "graph": None,
+    }
+    if msts.graph is not None:
+        arrays["graph_edges"] = msts.graph.edges
+        arrays["graph_d2"] = msts.graph.d2
+        arrays["graph_w2_kmax"] = msts.graph.w2_kmax
+        meta["graph"] = {
+            "variant": msts.graph.variant,
+            "n_points": int(msts.graph.n_points),
+            "stats": {
+                k: (int(v) if isinstance(v, (int, np.integer)) else v)
+                for k, v in msts.graph.stats.items()
+            },
+        }
+    return (
+        {k: engine.io.ensure_host(v) for k, v in arrays.items()},
+        meta,
+    )
+
+
+def unpack_msts(arrays: dict[str, np.ndarray], meta: dict) -> MultiMSTResult:
+    """Inverse of ``pack_msts``; raises KeyError on missing array fields."""
+    graph = None
+    if meta.get("graph") is not None:
+        g = meta["graph"]
+        graph = RngGraph(
+            edges=arrays["graph_edges"],
+            d2=arrays["graph_d2"],
+            w2_kmax=arrays["graph_w2_kmax"],
+            variant=g["variant"],
+            n_points=int(g["n_points"]),
+            stats=dict(g["stats"]),
+        )
+    return MultiMSTResult(
+        n=int(meta["n"]),
+        kmax=int(meta["kmax"]),
+        mpts_values=[int(m) for m in arrays["mpts_values"]],
+        graph=graph,
+        knn_d2=arrays["knn_d2"],
+        knn_idx=arrays["knn_idx"],
+        cd2=arrays["cd2"],
+        mst_ea=arrays["mst_ea"],
+        mst_eb=arrays["mst_eb"],
+        mst_w=arrays["mst_w"],
+        timings={k: float(v) for k, v in meta.get("timings", {}).items()},
+    )
+
+
 def extract_one_from_linkage(
     msts: MultiMSTResult,
     lk: LinkageRange,
@@ -275,8 +352,22 @@ def extract_one_from_linkage(
     min_cluster_size: int | None = None,
     allow_single_cluster: bool = False,
     cluster_selection_method: str = "eom",
+    cluster_selection_epsilon: float = 0.0,
+    policy=None,
 ) -> HierarchyResult:
-    """Vectorized condense/select/label for one mpts row of a LinkageRange."""
+    """Vectorized condense/select/label for one mpts row of a LinkageRange.
+
+    ``policy`` (an ``api.selection.SelectionPolicy``, duck-typed so core
+    never imports the api layer) bundles the four selection knobs; when
+    given it overrides the individual keyword arguments (its
+    ``min_cluster_size=None`` falls through to the per-mpts default).
+    """
+    if policy is not None:
+        cluster_selection_method = policy.method
+        cluster_selection_epsilon = policy.epsilon
+        allow_single_cluster = policy.allow_single_cluster
+        if policy.min_cluster_size is not None:
+            min_cluster_size = policy.min_cluster_size
     mpts = msts.mpts_values[row]
     mcs = min_cluster_size if min_cluster_size is not None else max(2, mpts)
     Z = linkage.linkage_to_Z(lk.left[row], lk.right[row], lk.height[row], lk.size[row])
@@ -287,6 +378,7 @@ def extract_one_from_linkage(
         stab,
         allow_single_cluster=allow_single_cluster,
         cluster_selection_method=cluster_selection_method,
+        cluster_selection_epsilon=cluster_selection_epsilon,
     )
     labels, lam_pt = hierarchy.labels_for_fast(tree, selected)
     return HierarchyResult(
@@ -310,6 +402,8 @@ def extract_hierarchies(
     min_cluster_size: int | None = None,
     allow_single_cluster: bool = False,
     cluster_selection_method: str = "eom",
+    cluster_selection_epsilon: float = 0.0,
+    policy=None,
 ) -> tuple[list[HierarchyResult], dict[str, float]]:
     """Batched extraction of the whole range; returns (hierarchies, timings)."""
     timings: dict[str, float] = {}
@@ -327,6 +421,8 @@ def extract_hierarchies(
             min_cluster_size=min_cluster_size,
             allow_single_cluster=allow_single_cluster,
             cluster_selection_method=cluster_selection_method,
+            cluster_selection_epsilon=cluster_selection_epsilon,
+            policy=policy,
         )
         for row in range(len(msts.mpts_values))
     ]
@@ -344,6 +440,7 @@ def multi_hdbscan(
     min_cluster_size: int | None = None,
     allow_single_cluster: bool = False,
     cluster_selection_method: str = "eom",
+    cluster_selection_epsilon: float = 0.0,
     backend: str | None = None,
     compute_hierarchies: bool = True,
     mpts_values: Sequence[int] | None = None,
@@ -363,6 +460,7 @@ def multi_hdbscan(
             min_cluster_size=min_cluster_size,
             allow_single_cluster=allow_single_cluster,
             cluster_selection_method=cluster_selection_method,
+            cluster_selection_epsilon=cluster_selection_epsilon,
         )
         timings.update(t_extract)
     else:
@@ -392,6 +490,7 @@ def hdbscan_baseline(
     min_cluster_size: int | None = None,
     allow_single_cluster: bool = False,
     cluster_selection_method: str = "eom",
+    cluster_selection_epsilon: float = 0.0,
     backend: str | None = None,
     compute_hierarchies: bool = True,
     plan: "engine.Plan | str | None" = None,
@@ -445,6 +544,7 @@ def hdbscan_baseline(
             min_cluster_size=min_cluster_size,
             allow_single_cluster=allow_single_cluster,
             cluster_selection_method=cluster_selection_method,
+            cluster_selection_epsilon=cluster_selection_epsilon,
         )
     timings["hierarchy"] = time.monotonic() - t0
     timings["total"] = timings["knn"] + t_mst + timings["hierarchy"]

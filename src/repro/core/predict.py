@@ -314,7 +314,10 @@ def predict_range(
 
     ``hierarchy_for`` supplies (typically cached) per-mpts extractions;
     ``table_cache`` (optional, mutated) reuses flattened walk tables across
-    calls — the serve engine passes a bounded cache here.
+    calls.  Since the fitted state is selection-agnostic but the walk
+    tables are not, ``api.FittedModel`` passes one cache per
+    ``SelectionPolicy`` here (bounded alongside its hierarchy LRU), and
+    binds ``hierarchy_for`` to the same policy.
     """
     xq = np.asarray(xq)
     validate_queries(xq)

@@ -1,10 +1,12 @@
 """Serving layer.
 
 ``engine.ClusterServeEngine`` is the clustering serve surface (the repo's
-actual workload): fit-once process-resident state, micro-batched
-out-of-sample prediction, LRU-bounded per-mpts extraction.  ``lm`` keeps
-the small batched LM decode engine used by the accelerator-side smoke
-tests and examples/serve_lm.py.
+actual workload): process-resident fitted state — either fit in-process or
+booted refit-free from a saved ``FittedModel`` artifact via
+``ClusterServeEngine.load(path)`` — micro-batched out-of-sample prediction,
+per-request ``SelectionPolicy``, LRU-bounded per-(mpts, policy) extraction.
+``lm`` keeps the small batched LM decode engine used by the
+accelerator-side smoke tests and examples/serve_lm.py.
 """
 
 from . import engine, lm

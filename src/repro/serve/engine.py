@@ -1,25 +1,33 @@
-"""Clustering serve engine: fit once, answer heavy query traffic.
+"""Clustering serve engine: fit once (or load an artifact), answer traffic.
 
 The ROADMAP north-star ("serve heavy traffic from millions of users") gets
 its clustering-shaped surface here: a process-resident engine over ONE
-fitted :class:`~repro.api.MultiHDBSCAN` whose fitted multi-MST state answers
-three request families —
+:class:`~repro.api.FittedModel` whose fitted multi-MST state answers three
+request families —
 
   * ``predict``  — out-of-sample assignment of query points (any subset of
     the fitted mpts range, or all of it),
   * ``labels`` / ``membership`` — the fitted labelling at one density level,
-    with optional per-request selection overrides (eom/leaf — Malzer &
-    Baum-style selection as a cheap per-query knob over the same trees),
+    with an optional per-request :class:`~repro.api.SelectionPolicy`
+    (eom/leaf, Malzer & Baum's epsilon threshold, min_cluster_size — cheap
+    per-query re-selection over the same cached linkage),
   * ``profile`` / ``dbcv_profile`` — whole-range summaries.
 
+Scale-out is refit-free: ``ClusterServeEngine.load(path)`` boots a worker
+from a saved ``FittedModel`` artifact — the fit happens once, anywhere, and
+any number of serve processes ``load()`` the npz in milliseconds.
+
 Requests enter a queue from any number of client threads; ONE worker thread
-owns the estimator (no lock on the fitted state) and **micro-batches**
+owns the model (no lock on the fitted state) and **micro-batches**
 concurrent predict requests: after the first request lands it waits up to
 ``max_delay_ms`` for company, then concatenates up to ``max_batch`` query
 rows into a single device pass — one ``query_knn`` + attach program serves
-every rider, whatever mix of mpts values they asked for.  Per-mpts
-hierarchy extractions are LRU-bounded (``hierarchy_cache_size``) so a
-hostile query mix cannot hold all R condensed trees resident.
+every rider, whatever mix of mpts values they asked for (riders with
+different selection *policies* share the device pass group-by-group: the
+attach stage is policy-independent, only the host tree walk differs).
+Per-(mpts, policy) hierarchy extractions are LRU-bounded
+(``hierarchy_cache_size``) so a hostile query mix cannot hold all R
+condensed trees resident.
 
 ``benchmarks/run.py`` drives this engine for the ``serve`` section of
 ``BENCH_pipeline.json`` (warm p50/p95 latency, queries/s).
@@ -36,7 +44,9 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core import multi, predict
+from ..api.model import FittedModel
+from ..api.selection import SelectionPolicy
+from ..core import predict
 
 
 @dataclasses.dataclass
@@ -46,51 +56,60 @@ class _Pending:
     t_submit: float
     q: np.ndarray | None = None
     mpts: int | None = None
-    selection: str | None = None        # per-request selection override
-    allow_single_cluster: bool | None = None
+    policy: SelectionPolicy | None = None   # per-request selection override
 
 
 class ClusterServeEngine:
-    """Process-resident serving over one fitted MultiHDBSCAN.
+    """Process-resident serving over one fitted model.
 
     Parameters
     ----------
-    estimator : repro.api.MultiHDBSCAN
-        A *fitted* estimator (the engine raises otherwise).  The engine
-        takes ownership: it installs its LRU bound on the estimator's
-        hierarchy cache and serializes all access through its worker.
+    model : repro.api.FittedModel or a *fitted* repro.api.MultiHDBSCAN
+        The fitted state to serve.  The engine takes ownership: it installs
+        its LRU bound on the model's extraction cache and serializes all
+        access through its worker.  Passing an estimator keeps the legacy
+        construction path working (the engine serves its ``model_``).
     max_batch : int
         Max query rows fused into one predict device pass.
     max_delay_ms : float
         How long the worker holds the first predict request of a batch
         waiting for riders.  The knob trades p50 latency for throughput.
     hierarchy_cache_size : int
-        LRU bound on cached per-mpts extractions (and their walk tables).
+        LRU bound on cached per-(mpts, policy) extractions (and their walk
+        tables).
     """
 
     def __init__(
         self,
-        estimator,
+        model,
         *,
         max_batch: int = 64,
         max_delay_ms: float = 2.0,
         hierarchy_cache_size: int = 8,
     ):
-        if getattr(estimator, "_msts", None) is None:
-            raise RuntimeError(
-                "ClusterServeEngine needs a fitted estimator; call fit(X) first "
-                "(or use ClusterServeEngine.fit)"
-            )
+        if isinstance(model, FittedModel):
+            self.model = model
+            self.estimator = None
+        else:  # legacy path: a fitted MultiHDBSCAN estimator
+            if getattr(model, "_model", None) is None:
+                raise RuntimeError(
+                    "ClusterServeEngine needs a FittedModel or a fitted "
+                    "estimator; call fit(X) first (or use "
+                    "ClusterServeEngine.fit / ClusterServeEngine.load)"
+                )
+            self.model = model.model_
+            self.estimator = model
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1; got {max_batch}")
         if hierarchy_cache_size < 1:
             raise ValueError(
                 f"hierarchy_cache_size must be >= 1; got {hierarchy_cache_size}"
             )
-        self.estimator = estimator
         self.max_batch = max_batch
         self.max_delay_ms = max_delay_ms
-        estimator.max_cached_hierarchies = hierarchy_cache_size
+        self.model.max_cached_hierarchies = hierarchy_cache_size
+        if self.estimator is not None:
+            self.estimator._max_cached_hierarchies = hierarchy_cache_size
 
         self._queue: collections.deque[_Pending] = collections.deque()
         self._cv = threading.Condition()
@@ -114,9 +133,34 @@ class ClusterServeEngine:
         est = MultiHDBSCAN(**estimator_options).fit(X)
         return cls(est, **(serve_options or {}))
 
+    @classmethod
+    def load(
+        cls,
+        path: str,
+        *,
+        serve_options: dict | None = None,
+        **load_options,
+    ) -> "ClusterServeEngine":
+        """Boot a serve worker from a saved FittedModel artifact — no refit.
+
+        ``load_options`` forward to :meth:`FittedModel.load` (``backend``,
+        ``mesh``, ``plan``, ``policy``, ``expect_config_hash``);
+        ``serve_options`` to the engine constructor (``max_batch``,
+        ``max_delay_ms``, ``hierarchy_cache_size``).  A loaded engine
+        answers predict/labels identically to one wrapping the model that
+        produced the artifact.
+        """
+        model = FittedModel.load(path, **load_options)
+        return cls(model, **(serve_options or {}))
+
     # -- client surface (thread-safe) --------------------------------------
 
-    def submit_predict(self, Q, mpts: int | None = None) -> Future:
+    def submit_predict(
+        self,
+        Q,
+        mpts: int | None = None,
+        policy: SelectionPolicy | None = None,
+    ) -> Future:
         """Enqueue an out-of-sample batch; resolves to (labels, probs) for
         one mpts, or a PredictResult for the whole range (mpts=None).
 
@@ -128,34 +172,55 @@ class ClusterServeEngine:
         Q = np.asarray(Q)
         if Q.ndim == 1:
             Q = Q[None, :]
-        predict.validate_queries(Q, self.estimator.n_features_in_)
+        predict.validate_queries(Q, self.model.n_features)
         if mpts is not None:
-            self.estimator._check_fitted().row_of(mpts)  # KeyError early
-        return self._submit(_Pending("predict", Future(), time.monotonic(), q=Q, mpts=mpts))
+            self.model.row_of(mpts)  # KeyError early
+        return self._submit(
+            _Pending("predict", Future(), time.monotonic(), q=Q, mpts=mpts,
+                     policy=policy)
+        )
 
-    def predict(self, Q, mpts: int | None = None, timeout: float | None = 60.0):
+    def predict(
+        self,
+        Q,
+        mpts: int | None = None,
+        policy: SelectionPolicy | None = None,
+        timeout: float | None = 60.0,
+    ):
         """Blocking ``submit_predict`` (still rides shared micro-batches)."""
-        return self.submit_predict(Q, mpts).result(timeout=timeout)
+        return self.submit_predict(Q, mpts, policy).result(timeout=timeout)
 
     def labels(
         self,
         mpts: int,
         *,
+        policy: SelectionPolicy | None = None,
         cluster_selection_method: str | None = None,
         allow_single_cluster: bool | None = None,
         timeout: float | None = 60.0,
     ) -> np.ndarray:
-        """Fitted labels at one level; selection overrides are per-request."""
-        p = _Pending(
-            "labels", Future(), time.monotonic(), mpts=mpts,
-            selection=cluster_selection_method,
-            allow_single_cluster=allow_single_cluster,
+        """Fitted labels at one level; selection is per-request.
+
+        Pass a :class:`SelectionPolicy` for the full surface (method,
+        epsilon, min_cluster_size); the two legacy keyword knobs remain as
+        sugar over ``model.default_policy.replace(...)``.
+        """
+        policy = self._legacy_policy(
+            policy, cluster_selection_method, allow_single_cluster
         )
+        p = _Pending("labels", Future(), time.monotonic(), mpts=mpts, policy=policy)
         return self._submit(p).result(timeout=timeout)
 
-    def membership(self, mpts: int, timeout: float | None = 60.0):
-        """Labels + membership probabilities + lambdas at one level."""
-        p = _Pending("membership", Future(), time.monotonic(), mpts=mpts)
+    def membership(
+        self,
+        mpts: int,
+        policy: SelectionPolicy | None = None,
+        timeout: float | None = 60.0,
+    ):
+        """The full Clustering view at one level: labels + probabilities +
+        lambdas + exemplars."""
+        p = _Pending("membership", Future(), time.monotonic(), mpts=mpts,
+                     policy=policy)
         return self._submit(p).result(timeout=timeout)
 
     def profile(self, timeout: float | None = 60.0) -> list[dict]:
@@ -167,6 +232,27 @@ class ClusterServeEngine:
         return self._submit(
             _Pending("dbcv", Future(), time.monotonic())
         ).result(timeout=timeout)
+
+    def _legacy_policy(
+        self,
+        policy: SelectionPolicy | None,
+        cluster_selection_method: str | None,
+        allow_single_cluster: bool | None,
+    ) -> SelectionPolicy | None:
+        if cluster_selection_method is None and allow_single_cluster is None:
+            return policy
+        if policy is not None:
+            raise ValueError(
+                "pass either policy= or the legacy cluster_selection_method/"
+                "allow_single_cluster knobs, not both"
+            )
+        base = self.model.default_policy
+        changes: dict = {}
+        if cluster_selection_method is not None:
+            changes["method"] = cluster_selection_method
+        if allow_single_cluster is not None:
+            changes["allow_single_cluster"] = allow_single_cluster
+        return base.replace(**changes)
 
     def stats(self) -> dict:
         """Latency/throughput counters over the engine's lifetime so far."""
@@ -270,71 +356,58 @@ class ClusterServeEngine:
                         p.future.set_exception(e)
 
     def _serve_predict(self, batch: list[_Pending]) -> None:
-        est = self.estimator
-        msts = est._check_fitted()
-        # one device pass for every rider: union of requested levels
-        # (any full-range request widens it to the whole fitted range)
-        if any(p.mpts is None for p in batch):
-            mpts_values: Sequence[int] = list(msts.mpts_values)
-        else:
-            mpts_values = sorted({p.mpts for p in batch})
-        Q = np.concatenate([p.q for p in batch], axis=0)
-        res = predict.predict_range(
-            msts,
-            est._X,
-            Q,
-            est.hierarchy_for,
-            plan=est.plan_,
-            mpts_values=list(mpts_values),
-            table_cache=est._walk_cache,
-        )
-        t_done = time.monotonic()
-        start = 0
+        """One fused device pass per *policy group* of the micro-batch.
+
+        The attach stage is policy-independent, but the host tree walk is
+        not, so riders are grouped by their (resolved) selection policy —
+        the overwhelmingly common single-policy batch stays one pass.
+        """
+        model = self.model
+        groups: dict[SelectionPolicy, list[_Pending]] = {}
         for p in batch:
-            stop = start + len(p.q)
-            if p.mpts is None:
-                out = predict.PredictResult(
-                    mpts_values=list(res.mpts_values),
-                    labels=res.labels[:, start:stop],
-                    probabilities=res.probabilities[:, start:stop],
-                    lambdas=res.lambdas[:, start:stop],
-                    neighbors=res.neighbors[:, start:stop],
-                )
+            pol = p.policy if p.policy is not None else model.default_policy
+            groups.setdefault(pol, []).append(p)
+        for pol, group in groups.items():
+            # one device pass for every rider: union of requested levels
+            # (any full-range request widens it to the whole fitted range)
+            if any(p.mpts is None for p in group):
+                mpts_values: Sequence[int] = list(model.msts.mpts_values)
             else:
-                r = res.mpts_values.index(p.mpts)
-                out = (res.labels[r, start:stop], res.probabilities[r, start:stop])
-            p.future.set_result(out)
-            start = stop
-        self._account(batch, t_done, n_queries=len(Q), n_batches=1)
+                mpts_values = sorted({p.mpts for p in group})
+            Q = np.concatenate([p.q for p in group], axis=0)
+            res = model.predict_range(Q, mpts_values=list(mpts_values), policy=pol)
+            t_done = time.monotonic()
+            start = 0
+            for p in group:
+                stop = start + len(p.q)
+                if p.mpts is None:
+                    out = predict.PredictResult(
+                        mpts_values=list(res.mpts_values),
+                        labels=res.labels[:, start:stop],
+                        probabilities=res.probabilities[:, start:stop],
+                        lambdas=res.lambdas[:, start:stop],
+                        neighbors=res.neighbors[:, start:stop],
+                    )
+                else:
+                    r = res.mpts_values.index(p.mpts)
+                    out = (res.labels[r, start:stop], res.probabilities[r, start:stop])
+                p.future.set_result(out)
+                start = stop
+            # account per group, each with its OWN completion time: a rider's
+            # recorded latency must not include other groups' device passes,
+            # and a later group's failure must not erase served riders
+            self._account(group, t_done, n_queries=len(Q), n_batches=1)
 
     def _serve_one(self, p: _Pending) -> None:
-        est = self.estimator
+        model = self.model
         if p.kind == "labels":
-            if p.selection is None and p.allow_single_cluster is None:
-                out = est.labels_for(p.mpts)
-            else:
-                # per-request selection knob: re-select over the SAME cached
-                # linkage, without disturbing the estimator's configuration
-                msts = est._check_fitted()
-                h = multi.extract_one_from_linkage(
-                    msts,
-                    est._ensure_linkage(),
-                    msts.row_of(p.mpts),
-                    min_cluster_size=est.min_cluster_size,
-                    allow_single_cluster=(
-                        est.allow_single_cluster
-                        if p.allow_single_cluster is None
-                        else p.allow_single_cluster
-                    ),
-                    cluster_selection_method=p.selection or est.cluster_selection_method,
-                )
-                out = h.labels
+            out = model.select(p.mpts, p.policy).labels
         elif p.kind == "membership":
-            out = est.membership_for(p.mpts)
+            out = model.select(p.mpts, p.policy)
         elif p.kind == "profile":
-            out = est.mpts_profile()
+            out = model.mpts_profile()
         elif p.kind == "dbcv":
-            out = est.dbcv_profile()
+            out = model.dbcv_profile()
         else:  # pragma: no cover - _Pending kinds are internal
             raise ValueError(f"unknown request kind {p.kind!r}")
         p.future.set_result(out)

@@ -199,6 +199,27 @@ def test_fit_rejects_non_finite_input(blobs520):
         MultiHDBSCAN(kmax=4).fit(np.full((30, 2), "a"))
 
 
+def test_refit_clears_stale_fitted_state(blobs520):
+    """Regression: fit() must reset every trailing-underscore fitted
+    attribute — a fit_predict on dataset A followed by fit(B) used to leave
+    A's labels_ (wrong length, wrong data) on the refitted estimator."""
+    rng = np.random.default_rng(23)
+    other = np.concatenate([
+        rng.normal((0, 0), 0.3, size=(60, 2)),
+        rng.normal((3, 3), 0.3, size=(60, 2)),
+    ]).astype(np.float32)
+
+    est = MultiHDBSCAN(kmax=8)
+    stale = est.fit_predict(blobs520)
+    assert stale.shape == (len(blobs520),)
+    est.fit(other)
+    assert not hasattr(est, "labels_")  # stale labels from blobs520 are gone
+    assert est.n_samples_ == len(other)
+    labels = est.fit_predict(other)
+    assert labels.shape == (len(other),)
+    np.testing.assert_array_equal(est.labels_, labels)
+
+
 def test_duplicate_heavy_ties_identical_across_backends():
     """Tie-stress regression: massively duplicated points (every mrd value
     tied many ways) must produce IDENTICAL labels across the ref / jnp /

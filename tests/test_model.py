@@ -1,0 +1,303 @@
+"""FittedModel artifact layer: save/load round-trips (bit-identical labels,
+hierarchies, predictions across backends), corruption/schema/config error
+handling, SelectionPolicy views (leaf/eom/epsilon), and exemplars."""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ArtifactError,
+    Clustering,
+    FittedModel,
+    MultiHDBSCAN,
+    SelectionPolicy,
+)
+
+KMAX = 8
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(7)
+    x = np.concatenate([
+        rng.normal((0, 0), 0.3, size=(80, 2)),
+        rng.normal((4, 0), 0.5, size=(80, 2)),
+        rng.normal((2, 4), 0.4, size=(60, 2)),
+        rng.uniform(-2, 6, size=(20, 2)),
+    ]).astype(np.float32)
+    return x
+
+
+@pytest.fixture(scope="module")
+def model(dataset):
+    return FittedModel.fit(dataset, KMAX)
+
+
+@pytest.fixture(scope="module")
+def queries(dataset):
+    rng = np.random.default_rng(8)
+    return (dataset[rng.choice(len(dataset), 12)]
+            + rng.normal(0, 0.05, (12, 2))).astype(np.float32)
+
+
+def _resave_with_header(src_path, dst_path, mutate):
+    """Rewrite an artifact with a hand-edited header (tamper harness)."""
+    with np.load(src_path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    header = json.loads(arrays.pop("__header__").tobytes().decode())
+    mutate(header)
+    with open(dst_path, "wb") as f:
+        np.savez(
+            f,
+            __header__=np.frombuffer(json.dumps(header).encode(), np.uint8),
+            **arrays,
+        )
+
+
+# -- round trips -------------------------------------------------------------
+
+
+def test_save_load_bit_identical(model, queries, tmp_path):
+    """The acceptance criterion: a loaded artifact answers every fitted mpts
+    with bit-identical labels, hierarchies, and predictions — zero refit."""
+    path = model.save(str(tmp_path / "m.npz"))
+    loaded = FittedModel.load(path)
+
+    assert loaded.config == model.config
+    assert loaded.config_hash == model.config_hash
+    assert loaded.mpts_values == model.mpts_values
+    assert loaded.default_policy == model.default_policy
+    assert loaded.n_graph_edges == model.n_graph_edges
+
+    for mpts in model.mpts_values:
+        a, b = model.select(mpts), loaded.select(mpts)
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(a.probabilities, b.probabilities)
+        np.testing.assert_array_equal(a.lambdas, b.lambdas)
+        np.testing.assert_array_equal(a.condensed_tree.parent, b.condensed_tree.parent)
+        np.testing.assert_array_equal(a.condensed_tree.child, b.condensed_tree.child)
+        np.testing.assert_array_equal(a.condensed_tree.lam, b.condensed_tree.lam)
+        assert a.stability == b.stability
+        assert a.selected == b.selected
+
+    want = model.approximate_predict(queries)
+    got = loaded.approximate_predict(queries)
+    np.testing.assert_array_equal(want.labels, got.labels)
+    np.testing.assert_array_equal(want.probabilities, got.probabilities)
+    np.testing.assert_array_equal(want.lambdas, got.lambdas)
+    np.testing.assert_array_equal(want.neighbors, got.neighbors)
+
+
+def test_save_load_roundtrip_every_backend(dataset, queries, tmp_path):
+    """Artifacts are backend-portable: a model fitted under each backend
+    round-trips to the same labels and predictions."""
+    import jax
+
+    backends = ["ref", "jnp"]
+    backends.append("pallas" if jax.default_backend() == "tpu" else "pallas_interpret")
+    for b in backends:
+        m = FittedModel.fit(dataset, KMAX, backend=b)
+        path = m.save(str(tmp_path / f"m_{b}.npz"))
+        loaded = FittedModel.load(path, backend=b)
+        for mpts in (2, KMAX // 2, KMAX):
+            np.testing.assert_array_equal(
+                m.select(mpts).labels, loaded.select(mpts).labels, err_msg=b
+            )
+        lab, prob = m.approximate_predict(queries, mpts=KMAX // 2)
+        lab2, prob2 = loaded.approximate_predict(queries, mpts=KMAX // 2)
+        np.testing.assert_array_equal(lab, lab2, err_msg=b)
+        np.testing.assert_array_equal(prob, prob2, err_msg=b)
+
+
+def test_estimator_save_and_roundtrip(dataset, tmp_path):
+    """est.save(path) is FittedModel.save; a load serves the same labels."""
+    est = MultiHDBSCAN(kmax=KMAX, min_cluster_size=10).fit(dataset)
+    path = est.save(str(tmp_path / "est.npz"))
+    loaded = FittedModel.load(path)
+    # the estimator's selection configuration rides along as default policy
+    assert loaded.default_policy.min_cluster_size == 10
+    np.testing.assert_array_equal(
+        est.model_.select(KMAX).labels, loaded.select(KMAX).labels
+    )
+
+
+# -- error handling ----------------------------------------------------------
+
+
+def test_load_rejects_garbage_and_truncation(model, tmp_path):
+    garbage = tmp_path / "garbage.npz"
+    garbage.write_bytes(b"this is not an npz file at all")
+    with pytest.raises(ArtifactError, match="not a readable FittedModel"):
+        FittedModel.load(str(garbage))
+
+    path = model.save(str(tmp_path / "trunc.npz"))
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[: len(blob) // 2])
+    with pytest.raises(ArtifactError):
+        FittedModel.load(path)
+
+
+def test_load_rejects_foreign_npz(tmp_path):
+    foreign = tmp_path / "foreign.npz"
+    np.savez(foreign, a=np.arange(3))
+    with pytest.raises(ArtifactError, match="__header__"):
+        FittedModel.load(str(foreign))
+
+
+def test_load_rejects_schema_version_mismatch(model, tmp_path):
+    src = model.save(str(tmp_path / "ok.npz"))
+    bad = str(tmp_path / "future.npz")
+
+    def bump(header):
+        header["schema_version"] = 999
+
+    _resave_with_header(src, bad, bump)
+    with pytest.raises(ArtifactError, match="schema version 999"):
+        FittedModel.load(bad)
+
+
+def test_load_rejects_config_tampering(model, tmp_path):
+    """A hand-edited config (kmax changed) no longer matches its hash."""
+    src = model.save(str(tmp_path / "ok.npz"))
+    bad = str(tmp_path / "tampered.npz")
+
+    def tamper(header):
+        header["config"]["kmax"] = 99
+
+    _resave_with_header(src, bad, tamper)
+    with pytest.raises(ArtifactError, match="config fingerprint mismatch"):
+        FittedModel.load(bad)
+
+
+def test_load_rejects_wrong_expected_config(model, tmp_path):
+    """Deployments can pin the workload they were built for."""
+    path = model.save(str(tmp_path / "m.npz"))
+    assert FittedModel.load(
+        path, expect_config_hash=model.config_hash
+    ).config_hash == model.config_hash
+    with pytest.raises(ArtifactError, match="does not match the expected"):
+        FittedModel.load(path, expect_config_hash="0" * 16)
+
+
+def test_load_rejects_missing_arrays(model, tmp_path):
+    src = model.save(str(tmp_path / "ok.npz"))
+    with np.load(src, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    arrays.pop("mst_ea")
+    hollow = tmp_path / "hollow.npz"
+    with open(hollow, "wb") as f:
+        np.savez(f, **arrays)
+    with pytest.raises(ArtifactError, match="missing arrays"):
+        FittedModel.load(str(hollow))
+
+
+# -- selection policies ------------------------------------------------------
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="method"):
+        SelectionPolicy(method="bogus")
+    with pytest.raises(ValueError, match="epsilon"):
+        SelectionPolicy(epsilon=-0.5)
+    with pytest.raises(ValueError, match="epsilon"):
+        SelectionPolicy(epsilon=float("nan"))
+    with pytest.raises(ValueError, match="min_cluster_size"):
+        SelectionPolicy(min_cluster_size=1)
+    p = SelectionPolicy(method="leaf", epsilon=0.5)
+    assert p.replace(epsilon=0.0) == SelectionPolicy(method="leaf")
+    assert SelectionPolicy.from_dict(p.to_dict()) == p
+    assert hash(p) == hash(SelectionPolicy(method="leaf", epsilon=0.5))
+
+
+def test_policy_views_cached_separately(model):
+    """(mpts, policy) pairs key the cache: different views coexist without
+    re-extraction, same view returns the same arrays."""
+    eom = model.select(KMAX)
+    leaf = model.select(KMAX, SelectionPolicy(method="leaf"))
+    assert leaf.n_clusters >= eom.n_clusters
+    assert model.select(KMAX).labels is eom.labels  # cache hit, same object
+    # every leaf cluster sits inside one eom cluster
+    for c in np.unique(leaf.labels[leaf.labels >= 0]):
+        parents = eom.labels[leaf.labels == c]
+        assert len(np.unique(parents[parents >= 0])) <= 1
+
+
+def test_epsilon_merges_fine_clusters(model):
+    """Malzer & Baum hybrid: epsilon coarsens the leaf partition, and each
+    base cluster lands in exactly one epsilon-cluster (pure merging)."""
+    base = model.select(3, SelectionPolicy(method="leaf"))
+    prev = base.n_clusters
+    assert model.select(3, SelectionPolicy(method="leaf", epsilon=0.0)).labels is base.labels
+    for eps in (0.3, 0.8, 2.0):
+        merged = model.select(3, SelectionPolicy(method="leaf", epsilon=eps))
+        assert merged.n_clusters <= prev
+        for c in np.unique(base.labels[base.labels >= 0]):
+            targets = merged.labels[base.labels == c]
+            targets = targets[targets >= 0]
+            assert len(np.unique(targets)) <= 1, (eps, c)
+        prev = merged.n_clusters
+    # epsilon applies to eom selection too
+    eom_eps = model.select(3, policy=SelectionPolicy(epsilon=2.0))
+    assert eom_eps.n_clusters <= model.select(3).n_clusters
+
+
+def test_select_all_matches_per_level(model):
+    views = model.select_all()
+    assert [v.mpts for v in views] == model.mpts_values
+    for v in views:
+        assert isinstance(v, Clustering)
+        np.testing.assert_array_equal(v.labels, model.select(v.mpts).labels)
+
+
+def test_exemplars_are_core_members(model):
+    """Exemplars: non-empty per cluster, members of their own cluster, and
+    at least as strongly attached as the average member."""
+    for policy in (None, SelectionPolicy(method="leaf")):
+        c = model.select(KMAX, policy)
+        assert len(c.exemplars) == c.n_clusters
+        for label, ex in enumerate(c.exemplars):
+            assert len(ex) > 0
+            assert np.all(c.labels[ex] == label)
+            assert c.probabilities[ex].mean() >= c.probabilities[c.labels == label].mean()
+
+
+def test_lru_bound_on_policy_cache(dataset):
+    model = FittedModel.fit(dataset, KMAX, max_cached_hierarchies=2)
+    model.select(2)
+    model.select(3)
+    model.select(3, SelectionPolicy(method="leaf"))  # evicts (2, eom)
+    keys = list(model._cache)
+    assert len(keys) == 2 and keys[0] == (3, model.default_policy)
+    lab = model.select(2).labels  # re-extracts transparently
+    assert lab.shape == (len(dataset),)
+
+
+def test_clustering_view_shares_no_mutable_state(model):
+    c = model.select(KMAX)
+    assert c.condensed_tree is model.hierarchy(KMAX).condensed
+    assert c.mpts == KMAX and c.policy == model.default_policy
+    r = repr(c)
+    assert "Clustering" in r and "mpts=8" in r
+
+
+def test_deprecated_estimator_shims_match_model(dataset):
+    """The legacy per-level accessors answer identically and warn."""
+    est = MultiHDBSCAN(kmax=KMAX).fit(dataset)
+    with pytest.warns(FutureWarning, match="labels_for"):
+        lab = est.labels_for(KMAX)
+    np.testing.assert_array_equal(lab, est.model_.select(KMAX).labels)
+    with pytest.warns(FutureWarning, match="membership_for"):
+        m = est.membership_for(KMAX)
+    np.testing.assert_array_equal(m.probabilities, est.model_.select(KMAX).probabilities)
+    with pytest.warns(FutureWarning, match="hierarchy_for"):
+        h = est.hierarchy_for(KMAX)
+    assert h is est.model_.hierarchy(KMAX)
+    # the new surface is warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", FutureWarning)
+        est.model_.select(KMAX).labels
+        est.select(KMAX).probabilities
+        est.approximate_predict(dataset[:3], mpts=KMAX)

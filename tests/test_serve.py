@@ -160,6 +160,69 @@ def test_stats_shape(engine):
     assert s["p95_ms"] >= s["p50_ms"] >= 0.0
 
 
+def test_engine_loads_from_artifact_and_matches_fresh(dataset, engine, tmp_path):
+    """Satellite acceptance: ClusterServeEngine.load boots from a saved
+    FittedModel artifact — zero refit, zero raw-data access — and answers
+    predict/labels identically to the freshly-fitted engine."""
+    path = engine.model.save(str(tmp_path / "served.npz"))
+    q = dataset[:7] + 0.03
+    with ClusterServeEngine.load(
+        path, serve_options={"max_batch": 16, "hierarchy_cache_size": 4}
+    ) as loaded:
+        assert loaded.estimator is None  # model-only boot, no estimator
+        for mpts in (2, 5, 8):
+            np.testing.assert_array_equal(
+                loaded.labels(mpts), engine.labels(mpts), err_msg=f"mpts={mpts}"
+            )
+            lab_l, prob_l = loaded.predict(q, mpts=mpts)
+            lab_f, prob_f = engine.predict(q, mpts=mpts)
+            np.testing.assert_array_equal(lab_l, lab_f)
+            np.testing.assert_array_equal(prob_l, prob_f)
+        res_l, res_f = loaded.predict(q), engine.predict(q)  # full range
+        np.testing.assert_array_equal(res_l.labels, res_f.labels)
+        np.testing.assert_array_equal(res_l.probabilities, res_f.probabilities)
+
+
+def test_engine_load_pins_expected_config(dataset, engine, tmp_path):
+    from repro.api import ArtifactError
+
+    path = engine.model.save(str(tmp_path / "pinned.npz"))
+    with ClusterServeEngine.load(
+        path, expect_config_hash=engine.model.config_hash
+    ) as eng:
+        assert eng.model.config_hash == engine.model.config_hash
+    with pytest.raises(ArtifactError, match="does not match the expected"):
+        ClusterServeEngine.load(path, expect_config_hash="f" * 16)
+
+
+def test_per_request_selection_policy(dataset, engine):
+    """A SelectionPolicy rides along per request — predict and labels — and
+    never disturbs the engine's default configuration."""
+    from repro.api import SelectionPolicy
+
+    model = engine.model
+    leaf = SelectionPolicy(method="leaf")
+    np.testing.assert_array_equal(
+        engine.labels(8, policy=leaf), model.select(8, leaf).labels
+    )
+    eps = SelectionPolicy(method="leaf", epsilon=1.0)
+    np.testing.assert_array_equal(
+        engine.labels(8, policy=eps), model.select(8, eps).labels
+    )
+    with pytest.raises(ValueError, match="not both"):
+        engine.labels(8, policy=leaf, cluster_selection_method="eom")
+
+    q = dataset[:5] + 0.02
+    lab_leaf, prob_leaf = engine.predict(q, mpts=8, policy=leaf)
+    direct = model.approximate_predict(q, mpts=8, policy=leaf)
+    np.testing.assert_array_equal(lab_leaf, direct[0])
+    np.testing.assert_allclose(prob_leaf, direct[1])
+    # default-policy answers are unchanged afterwards
+    np.testing.assert_array_equal(engine.labels(8), model.select(8).labels)
+    m = engine.membership(8, policy=leaf)
+    np.testing.assert_array_equal(m.labels, model.select(8, leaf).labels)
+
+
 # ---------------------------------------------------------------------------
 # Batched LM engine regressions (serve/lm.py)
 # ---------------------------------------------------------------------------

@@ -35,6 +35,7 @@ BENCH_REQUIRED_FIELDS = [
     "speedup_vs_baseline",
     "serve.batch", "serve.n_queries", "serve.p50_ms", "serve.p95_ms",
     "serve.queries_per_s", "serve.mean_batch",
+    "artifact.save_ms", "artifact.load_ms", "artifact.bytes",
 ]
 
 

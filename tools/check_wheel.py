@@ -1,0 +1,66 @@
+"""Packaging smoke: run the save/load quickstart against an INSTALLED repro.
+
+A file-level API redesign is exactly where packaging bit-rot hides (a new
+module missing from the wheel, a src/ import that only works in a
+checkout), so CI builds sdist+wheel, installs the wheel into a clean venv,
+and runs this script FROM OUTSIDE the repo:
+
+  python -m build
+  python -m venv /tmp/venv && /tmp/venv/bin/pip install dist/*.whl
+  cd /tmp && /tmp/venv/bin/python /path/to/tools/check_wheel.py --require-installed
+
+``--require-installed`` fails if ``repro`` resolves to a source checkout
+(src/ on the path) instead of site-packages — the guard that makes the venv
+step meaningful.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+
+def main() -> int:
+    import numpy as np
+
+    import repro
+    from repro.api import FittedModel, SelectionPolicy
+
+    origin = os.path.abspath(repro.__file__)
+    installed = f"{os.sep}site-packages{os.sep}" in origin
+    print(f"repro {repro.__version__} from {origin} (installed={installed})")
+    if "--require-installed" in sys.argv and not installed:
+        print("FAIL: repro imported from a source checkout, not the wheel")
+        return 1
+
+    rng = np.random.default_rng(0)
+    x = np.concatenate([
+        rng.normal((0, 0), 0.3, size=(70, 2)),
+        rng.normal((4, 0), 0.5, size=(70, 2)),
+    ]).astype(np.float32)
+
+    model = FittedModel.fit(x, kmax=6)
+    with tempfile.TemporaryDirectory() as td:
+        path = model.save(os.path.join(td, "wheel-smoke.fitted.npz"))
+        loaded = FittedModel.load(path)
+    for mpts in loaded.mpts_values:
+        np.testing.assert_array_equal(
+            model.select(mpts).labels, loaded.select(mpts).labels
+        )
+    leaf = loaded.select(6, SelectionPolicy(method="leaf"))
+    assert leaf.n_clusters >= loaded.select(6).n_clusters
+
+    q = x[:4] + 0.02
+    want = model.approximate_predict(q, mpts=6)
+    got = loaded.approximate_predict(q, mpts=6)
+    np.testing.assert_array_equal(want[0], got[0])
+    np.testing.assert_array_equal(want[1], got[1])
+
+    print("ok: wheel install fits, saves, loads, selects, and predicts "
+          "bit-identically")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
