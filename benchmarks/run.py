@@ -86,6 +86,17 @@ def main() -> None:
         f"artifact/save_load,{art['save_ms'] * 1e3:.0f},"
         f"load_ms={art['load_ms']};bytes={art['bytes']}"
     )
+    nscale = nscale_sweep()
+    pipeline["nscale"] = nscale
+    for r in nscale["rows"]:
+        print(
+            f"nscale/n={r['n']},{r['total'] * 1e6:.0f},"
+            f"path={r['path']};candidates_s={r['candidates']}"
+        )
+    print(
+        f"nscale/slope,{nscale['slope_candidates'] * 1e6:.0f},"
+        f"slope_candidates={nscale['slope_candidates']}"
+    )
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
     with open(out, "w") as f:
         json.dump(pipeline, f, indent=1)
@@ -126,6 +137,11 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
         — warm out-of-sample latency through serve.ClusterServeEngine
       + (v4) artifact{save_ms,load_ms,bytes} — FittedModel save/load cost
         at this n (the refit-free serve-worker boot path)
+      + (v5) nscale{sizes,d,kmax,rows,slope_candidates} — dual-tree
+        n-scaling sweep 10^3 -> 10^5 with per-n stage seconds and the
+        fitted log-log slope of the candidate stage (attached by
+        ``main()`` via ``nscale_sweep()``; the n=10^5 row is the routine
+        large-n benchmark row)
         (tools/check_readme.py fails the docs lane if any of these fields,
         the provenance block, or the artifact block ever goes missing)
 
@@ -176,7 +192,7 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
     }
     stage = lambda t, k: round(t.get(k, 0.0), 4)  # noqa: E731
     return {
-        "schema_version": 4,
+        "schema_version": 5,
         "config": config,
         "provenance": {
             "git_sha": _git_sha(),
@@ -209,6 +225,79 @@ def pipeline_bench(n: int = 4000, d: int = 8, kmax: int = 16, seed: int = 0,
         "speedup_vs_baseline": round(wall_base / max(wall_multi, 1e-9), 2),
         "serve": serve,
         "artifact": artifact,
+    }
+
+
+def nscale_sweep(
+    sizes: tuple = (1000, 4000, 16000, 50000, 100000),
+    d: int = 8,
+    kmax: int = 16,
+    seed: int = 0,
+) -> dict:
+    """n-scaling sweep over the dual-tree candidate path, 10^3 -> 10^5.
+
+    Runs the full multi-hierarchy pipeline at each ``n`` with the dual-tree
+    candidate tier forced (the tier whose asymptotics the slope guards; the
+    auto tier would silently mix the all-pairs-flavored small-n path into
+    the fit).  Reports per-n stage seconds plus the least-squares log-log
+    slope of the CANDIDATE stage (kNN + candidate-graph build — the stages
+    the dual-tree traversal replaced; MST/extraction are already
+    edge-linear).  A slope near 1 is the n log n regime the paper's scaling
+    figures assume; the slow-lane regression test pins slope < 1.6.
+    """
+    import dataclasses
+    import math
+    import time
+
+    from benchmarks import paper_sweeps
+    from repro import engine
+    from repro.core import multi
+
+    rows = []
+    for n in sizes:
+        x = paper_sweeps._dataset(n, d, seed)
+        plan = dataclasses.replace(
+            engine.resolve_plan("auto"), candidate_method="dualtree"
+        )
+        t0 = time.monotonic()
+        res = multi.multi_hdbscan(x, kmax, plan=plan)
+        total = time.monotonic() - t0
+        t = res.timings
+        rows.append({
+            "n": int(n),
+            "path": "dualtree",
+            "knn": round(t.get("knn", 0.0), 4),
+            "candidates": round(
+                t.get("knn", 0.0) + t.get("rng_build", 0.0), 4
+            ),
+            "rng_build": round(t.get("rng_build", 0.0), 4),
+            "mst_range": round(t.get("mst_range", 0.0), 4),
+            "hierarchy": round(t.get("hierarchy", 0.0), 4),
+            "total": round(total, 4),
+            "edges": int(len(res.graph.edges)),
+        })
+
+    # least-squares slope of log(candidate seconds) vs log(n); rows too fast
+    # to time reliably (< 5 ms) are excluded from the fit
+    pts = [
+        (math.log(r["n"]), math.log(r["candidates"]))
+        for r in rows
+        if r["candidates"] > 5e-3
+    ]
+    if len(pts) >= 2:
+        mx = sum(p[0] for p in pts) / len(pts)
+        my = sum(p[1] for p in pts) / len(pts)
+        num = sum((p[0] - mx) * (p[1] - my) for p in pts)
+        den = sum((p[0] - mx) ** 2 for p in pts)
+        slope = num / den if den else float("nan")
+    else:
+        slope = float("nan")
+    return {
+        "sizes": [int(n) for n in sizes],
+        "d": d,
+        "kmax": kmax,
+        "rows": rows,
+        "slope_candidates": round(slope, 4),
     }
 
 

@@ -171,7 +171,7 @@ def fit_msts(
     timings: dict[str, float] = {}
 
     t0 = time.monotonic()
-    knn_d2, knn_idx = plan.knn(x, kmax - 1)
+    knn_d2, knn_idx = plan.knn(x, kmax - 1, x_host=x_host)
     cd2_dev = mrd_mod.core_distances2(knn_d2)
     knn_host, knn_idx_host, cd2 = engine.to_host((knn_d2, knn_idx, cd2_dev), "knn")
     timings["knn"] = time.monotonic() - t0
@@ -185,6 +185,8 @@ def fit_msts(
         plan=plan,
         x_host=x_host,
         cd_kmax_host=np.sqrt(cd2[:, -1].astype(np.float64)),
+        knn_d2_host=knn_host,
+        knn_idx_host=knn_idx_host,
     )
     timings["rng_build"] = time.monotonic() - t0
 
@@ -498,14 +500,15 @@ def hdbscan_baseline(
     """Paper's baseline: shared kNN pass + dense complete-graph MST per mpts."""
     _validate_min_cluster_size(min_cluster_size)
     plan = plan if isinstance(plan, engine.Plan) else engine.resolve_plan(plan, backend=backend)
-    x = jnp.asarray(x)
+    x_host = engine.io.ensure_host(x)
+    x = jnp.asarray(x_host)
     n = x.shape[0]
     mpts_list = list(mpts_values)
     kmax = kmax or max(mpts_list)
     timings: dict[str, float] = {}
 
     t0 = time.monotonic()
-    knn_d2, _ = plan.knn(x, kmax - 1)
+    knn_d2, _ = plan.knn(x, kmax - 1, x_host=x_host)
     cd2 = mrd_mod.core_distances2(knn_d2)
     cd2.block_until_ready()
     timings["knn"] = time.monotonic() - t0

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import engine
+from . import dualtree as dualtree_mod
 from . import mrd as mrd_mod
 from . import sbcn as sbcn_mod
 from . import wspd as wspd_mod
@@ -354,8 +355,9 @@ def _build_fused(
         posc = _compact_idx(surv_cert, cap=capc)
         validc = jnp.arange(capc) < n_cert
         keepc = validc  # certified => provably in the exact RNG
+        d2c, w2c = canonical_edge_weights(x, cd2k, lo[posc], hi[posc])
         parts_dev.append(
-            (lo[posc], hi[posc], keepc, validc, d2_1[posc], w2_1[posc])
+            (lo[posc], hi[posc], keepc, validc, d2c, w2c, w2_1[posc])
         )
     if n_open:
         capo = min(_pow2_ceil(n_open), -(-n_open // q) * q)
@@ -365,9 +367,10 @@ def _build_fused(
             x, cd2k, knn_idx, knn_d2, lo[poso], hi[poso], valido,
             k_check=k_full,
         )
+        d2o, w2o = canonical_edge_weights(x, cd2k, lo[poso], hi[poso])
         parts_dev.append(
             (lo[poso], hi[poso], valido & ~killed2, jnp.zeros_like(valido),
-             d2_2, w2_2)
+             d2o, w2o, w2_2)
         )
 
     parts = engine.to_host(parts_dev, "graph")
@@ -377,18 +380,21 @@ def _build_fused(
     certified = np.concatenate([p[3] for p in parts])
     d2_h = np.concatenate([p[4] for p in parts])
     w2_h = np.concatenate([p[5] for p in parts])
+    w2_stage = np.concatenate([p[6] for p in parts])
     # restore the slot path's sorted-(lo, hi) edge order: downstream MST
     # tie-breaks are by edge id, so order parity keeps the paths bit-equal
     order = np.lexsort((hi_h, lo_h))
-    lo_h, hi_h, keep, certified, d2_h, w2_h = (
-        v[order] for v in (lo_h, hi_h, keep, certified, d2_h, w2_h)
+    lo_h, hi_h, keep, certified, d2_h, w2_h, w2_stage = (
+        v[order] for v in (lo_h, hi_h, keep, certified, d2_h, w2_h, w2_stage)
     )
     stats["m_removed_knn"] = n_unique - int(keep.sum())
     stats["m_certified"] = int((keep & certified).sum())
 
     if variant == "rng":
+        # the lune pass thresholds on the STAGE w2 values (their verdicts
+        # carry the eps margins); the exported arrays stay canonical
         keep = _exact_lune_pass(
-            keep, certified, lo_h, hi_h, w2_h, x, cd2k, plan, stats
+            keep, certified, lo_h, hi_h, w2_stage, x, cd2k, plan, stats
         )
 
     edges = np.stack(
@@ -399,6 +405,104 @@ def _build_fused(
         edges=edges,
         d2=d2_h[keep],
         w2_kmax=w2_h[keep],
+        variant=variant,
+        n_points=n,
+        stats=stats,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Canonical per-edge weight program
+# ---------------------------------------------------------------------------
+#
+# The d2/w2_kmax arrays EXPORTED on RngGraph feed the all-mpts reweight and
+# therefore every MST weight downstream.  XLA codegen is only bitwise
+# deterministic within one compiled program: the same diff-form formula
+# inlined into the fused-cascade programs, the eager slot-path ops and a
+# separate jitted helper can disagree by ulps (per-callsite FMA contraction,
+# shape-dependent vectorization), which breaks the bit-parity contract
+# between candidate paths that produce the same edge set.  So every path
+# exports through THIS one program: a fixed (chunk,)-shaped lax.map body,
+# shared via the cached_program registry — identical program, identical
+# operand shapes, identical bits, for any edge count.  The filter stages
+# keep using their own in-program values (their verdicts carry eps margins
+# that absorb ulp noise); only the exported arrays are canonicalized.
+
+_WEIGHT_CHUNK = 4096
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _edge_weights_chunked(x, cd2k, ea, eb, *, chunk: int):
+    def one(args):
+        ea_c, eb_c = args
+        d2 = mrd_mod.edge_d2(x, ea_c, eb_c)
+        return d2, mrd_mod.mrd2_from_parts(d2, cd2k[ea_c], cd2k[eb_c])
+
+    d2, w2 = jax.lax.map(
+        one, (ea.reshape(-1, chunk), eb.reshape(-1, chunk))
+    )
+    return d2.reshape(-1), w2.reshape(-1)
+
+
+def canonical_edge_weights(x, cd2k, ea, eb):
+    """Exact f32 (d2, w2_kmax) for an edge list — the one export program.
+
+    Pads to the fixed chunk multiple (index-0 edges, sliced back off), so
+    the compiled body sees one shape regardless of m and two calls on the
+    same (n, d) dataset agree bitwise edge-for-edge.
+    """
+    m = int(ea.shape[0])
+    m_pad = -(-max(m, 1) // _WEIGHT_CHUNK) * _WEIGHT_CHUNK
+    ea = jnp.asarray(ea, jnp.int32)
+    eb = jnp.asarray(eb, jnp.int32)
+    if m_pad != m:
+        pad = jnp.zeros((m_pad - m,), jnp.int32)
+        ea = jnp.concatenate([ea, pad])
+        eb = jnp.concatenate([eb, pad])
+    prog = engine.plan.cached_program(
+        ("edge_weights_canonical", _WEIGHT_CHUNK, int(x.shape[1])),
+        lambda: functools.partial(_edge_weights_chunked, chunk=_WEIGHT_CHUNK),
+    )
+    d2, w2 = prog(x, cd2k, ea, eb)
+    return d2[:m], w2[:m]
+
+
+def _build_dualtree(
+    x, knn_d2, knn_idx, variant, plan, x_host, knn_d2_host, knn_idx_host
+) -> RngGraph:
+    """Large-n tier: dual-tree Borůvka candidate edges + device weights.
+
+    The host traversals select edge STRUCTURE only (core.dualtree); the d2
+    and w2_kmax values that reach results come from the canonical per-edge
+    weight program every tier exports through, in one ``graph`` sync.  The
+    graph is kNN^kmax ∪ S with S ⊇ an MST under mrd_kmax — a strict
+    superset of what every per-mpts MST needs (see core.dualtree), though
+    NOT an RNG: the ``variant`` filter semantics don't apply on this tier.
+    """
+    n = x.shape[0]
+    edges, stats = dualtree_mod.candidate_edges(
+        x_host,
+        knn_d2_host,
+        knn_idx_host,
+        leaf_size=plan.dualtree_leaf,
+        margin=plan.dualtree_margin,
+    )
+    stats["path"] = "dualtree"
+    m = len(edges)
+    stats["m_edges"] = m
+    if m == 0:
+        return _empty_graph(variant, n, 0)
+    d2_d, w2_d = canonical_edge_weights(
+        x,
+        knn_d2[:, -1],
+        jnp.asarray(edges[:, 0], jnp.int32),
+        jnp.asarray(edges[:, 1], jnp.int32),
+    )
+    d2_h, w2_h = engine.to_host((d2_d, w2_d), "graph")
+    return RngGraph(
+        edges=edges,
+        d2=d2_h,
+        w2_kmax=w2_h,
         variant=variant,
         n_points=n,
         stats=stats,
@@ -416,13 +520,21 @@ def build_rng_graph(
     plan: engine.Plan | None = None,
     x_host: np.ndarray | None = None,
     cd_kmax_host: np.ndarray | None = None,
+    knn_d2_host: np.ndarray | None = None,
+    knn_idx_host: np.ndarray | None = None,
 ) -> RngGraph:
-    """End-to-end RNG^kmax construction (Alg. 1 lines 5-29).
+    """End-to-end candidate graph construction (Alg. 1 lines 5-29).
 
     knn_d2/knn_idx: the single (kmax-1)-NN pass (ascending squared distances).
-    ``x_host`` / ``cd_kmax_host`` feed the WSPD control plane without a
-    device sync when the caller already holds host views (fit_msts does);
-    left None they are materialized here under the ``input`` tag.
+    ``x_host`` / ``cd_kmax_host`` / ``knn_*_host`` feed the host control
+    planes without a device sync when the caller already holds host views
+    (fit_msts does); left None they are materialized here under the
+    ``input`` tag.
+
+    Size-tier dispatch (``plan.use_dualtree``): large n routes to the
+    dual-tree Borůvka candidate path (``core.dualtree``, stats
+    ``path="dualtree"``); otherwise the WSPD/SBCN build below runs —
+    fused cascade by default, slot-array path as fallback/oracle.
     """
     if variant not in VARIANTS:
         raise ValueError(f"variant must be one of {VARIANTS}")
@@ -431,6 +543,17 @@ def build_rng_graph(
     cd2 = mrd_mod.core_distances2(knn_d2)
     if x_host is None:
         x_host = engine.io.ensure_host(x)
+
+    if n > 2 and plan.use_dualtree(int(n)):
+        if knn_d2_host is None or knn_idx_host is None:
+            knn_d2_host, knn_idx_host = (
+                engine.io.ensure_host(knn_d2),
+                engine.io.ensure_host(knn_idx),
+            )
+        return _build_dualtree(
+            x, knn_d2, knn_idx, variant, plan, x_host, knn_d2_host, knn_idx_host
+        )
+
     if cd_kmax_host is None:
         cd_kmax_host = np.sqrt(
             engine.io.ensure_host(cd2[:, -1]).astype(np.float64)
@@ -483,22 +606,27 @@ def build_rng_graph(
     hi = hi_s[pos]
     valid = jnp.arange(cap) < m_cand
 
+    cd2k = cd2[:, -1]
+    ea = jnp.where(valid, lo, 0).astype(jnp.int32)
+    eb = jnp.where(valid, hi, 0).astype(jnp.int32)
     if variant == "rng_ss":
-        cd2k = cd2[:, -1]
-        ea = jnp.where(valid, lo, 0).astype(jnp.int32)
-        eb = jnp.where(valid, hi, 0).astype(jnp.int32)
-        d2_d = mrd_mod.edge_d2(x, ea, eb)
-        w2_d = mrd_mod.mrd2_from_parts(d2_d, cd2k[ea], cd2k[eb])
         keep_d = valid
         certified_d = inside_d = jnp.zeros_like(valid)
+        w2_d = jnp.zeros((int(valid.shape[0]),), jnp.float32)
     else:
-        keep_d, certified_d, inside_d, d2_d, w2_d = filter_cascade_device(
+        keep_d, certified_d, inside_d, _, w2_d = filter_cascade_device(
             x, cd2, knn_idx, knn_d2, lo, hi, valid, plan=plan
         )
+    # exported weights always come from the canonical program (the filter
+    # verdicts above keep their own in-program values)
+    d2c_d, w2c_d = canonical_edge_weights(x, cd2k, ea, eb)
 
     # -- the one graph materialization --------------------------------------
-    lo_h, hi_h, valid_h, keep, certified, inside_any, d2_h, w2_h = engine.to_host(
-        (lo, hi, valid, keep_d, certified_d, inside_d, d2_d, w2_d), "graph"
+    lo_h, hi_h, valid_h, keep, certified, inside_any, d2_h, w2_h, w2_stage = (
+        engine.to_host(
+            (lo, hi, valid, keep_d, certified_d, inside_d, d2c_d, w2c_d, w2_d),
+            "graph",
+        )
     )
     stats = {
         "m_candidates": int(valid_h.sum()),
@@ -510,7 +638,7 @@ def build_rng_graph(
 
     if variant == "rng":
         keep = _exact_lune_pass(
-            keep, certified, lo_h, hi_h, w2_h, x, cd2[:, -1], plan, stats
+            keep, certified, lo_h, hi_h, w2_stage, x, cd2[:, -1], plan, stats
         )
 
     edges = np.stack(

@@ -47,14 +47,23 @@ class FairSplitTree:
         return self.perm[self.start[u] : self.end[u]]
 
 
-def build_fair_split_tree(x: np.ndarray, cd_kmax: np.ndarray) -> FairSplitTree:
-    """Midpoint-split fair-split tree; leaves are single points.
+def build_fair_split_tree(
+    x: np.ndarray, cd_kmax: np.ndarray, *, leaf_size: int = 1
+) -> FairSplitTree:
+    """Midpoint-split fair-split tree; leaves hold <= ``leaf_size`` points.
 
     Level-synchronous build: every level processes ALL of its nodes with
     whole-array numpy (``reduceat`` over the contiguous perm ranges + one
     stable per-level partition sort), so the host control plane costs
     O(depth) vectorized passes instead of one Python iteration per node.
+
+    ``leaf_size=1`` (the default) is the WSPD configuration (singleton
+    leaves, required by the pair recursion's termination argument);
+    ``core.dualtree`` builds with larger leaves so its traversals bottom out
+    in batched tile evaluations instead of per-point node pairs.
     """
+    if leaf_size < 1:
+        raise ValueError(f"leaf_size must be >= 1; got {leaf_size}")
     n, d = x.shape
     max_nodes = 2 * n - 1
     perm = np.arange(n)
@@ -98,7 +107,7 @@ def build_fair_split_tree(x: np.ndarray, cd_kmax: np.ndarray) -> FairSplitTree:
         max_cd[level] = cdmax
 
         sz = e - s
-        split = sz > 1
+        split = sz > leaf_size
         if not split.any():
             break
         sp = level[split]

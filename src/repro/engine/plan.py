@@ -88,6 +88,14 @@ class Plan:
     cascade_chunk: int = 65536  # edges per fused-cascade program chunk
     cascade_block_e: int = 256  # pallas edge-cascade tile
     tier_chunk_elems: int = 1 << 18  # fixed cells per SBCN emission chunk
+    # -- dual-tree Borůvka large-n tier (ISSUE 6) ---------------------------
+    candidate_method: str = "auto"  # "auto" | "wspd" | "dualtree"
+    dualtree_min_n: int = 20000     # auto tier threshold (candidate stage + kNN)
+    dualtree_leaf: int = 4          # fair-split leaf size for the traversals
+                                    # (measured optimum: larger leaves weaken
+                                    # the node-max prune bound faster than the
+                                    # tile batching pays it back)
+    dualtree_margin: float = 1e-5   # relative prune/emit margin (f64 vs f32 ties)
 
     # -- placement ---------------------------------------------------------
 
@@ -99,12 +107,50 @@ class Plan:
     def n_shards(self) -> int:
         return self.mesh.shape[self.axis] if self.mesh is not None else 1
 
+    def use_dualtree(self, n: int) -> bool:
+        """Size-tier dispatch for the candidate stages (kNN + graph build).
+
+        ``candidate_method`` forces a tier; ``"auto"`` switches to the
+        dual-tree path at ``dualtree_min_n`` points, where the all-pairs
+        flavored WSPD/SBCN tile work overtakes the traversal overhead.  The
+        small-n tier stays the oracle the dual-tree tests pin against.
+        """
+        if self.candidate_method == "dualtree":
+            return True
+        if self.candidate_method == "wspd":
+            return False
+        if self.candidate_method != "auto":
+            raise ValueError(
+                f"candidate_method must be 'auto', 'wspd' or 'dualtree'; "
+                f"got {self.candidate_method!r}"
+            )
+        return n >= self.dualtree_min_n
+
     # -- stage dispatch ----------------------------------------------------
 
-    def knn(self, x, k_top: int):
-        """(d2 ascending, idx): mesh ring path when sharded, kernels otherwise."""
+    def knn(self, x, k_top: int, *, x_host=None):
+        """(d2 ascending, idx): mesh ring path when sharded, dual-tree
+        candidate search + shared exact refine on the large-n single-device
+        tier, kernels otherwise.  ``x_host`` feeds the dual-tree host
+        control plane without an extra device sync when the caller already
+        holds a host view (fit_msts does)."""
         from .. import kernels
 
+        n = int(x.shape[0])
+        if not self.sharded and n > 2 and self.use_dualtree(n):
+            from ..core import dualtree
+            from . import io
+
+            if x_host is None:
+                x_host = io.ensure_host(x)
+            k_eff = min(n - 1, k_top + self.knn_refine_slack)
+            cand = dualtree.knn_candidates(
+                x_host,
+                k_eff,
+                leaf_size=self.dualtree_leaf,
+                margin=self.dualtree_margin,
+            )
+            return kernels.ops.knn_from_candidates(x, cand, k_top=k_top)
         return kernels.ops.knn(
             x,
             k_top,

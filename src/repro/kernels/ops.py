@@ -27,6 +27,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .lune_filter import lune_filter as _lune_pallas
@@ -163,6 +164,23 @@ def knn(
         interpret = backend == "pallas_interpret"
         d2, idx = _topk_pallas(
             x, k_eff, block_q=block_q, block_k=block_k, interpret=interpret
+        )
+    return _refine_knn(x, x, idx, k_top=k_top)
+
+
+def knn_from_candidates(x: jax.Array, cand_idx, *, k_top: int):
+    """kNN from a precomputed host candidate matrix (the dual-tree tier).
+
+    ``cand_idx``: (n, k_eff) int candidate neighbour ids per row (-1 pads),
+    guaranteed by the producer (core.dualtree.knn_candidates) to contain
+    the true ``k_top`` nearest.  Routes through the SAME ``_refine_knn``
+    exact re-evaluation as every other backend, so the (d2, idx) output is
+    bit-identical to the small-n tier's.
+    """
+    idx = jnp.asarray(np.asarray(cand_idx, np.int32))
+    if idx.shape[1] < k_top:
+        raise ValueError(
+            f"candidate matrix has {idx.shape[1]} columns < k_top={k_top}"
         )
     return _refine_knn(x, x, idx, k_top=k_top)
 

@@ -117,3 +117,40 @@ def test_dryrun_cell_subprocess():
     )
     assert r.returncode == 0, r.stdout + r.stderr[-2000:]
     assert "2 ok" in r.stdout
+
+
+@pytest.mark.slow
+def test_mesh_pipeline_matches_dualtree_tier():
+    """Multidevice n-scaling parity: the sharded (mesh) pipeline and the
+    single-device dual-tree tier produce bit-identical sorted MST weight
+    rows for every mpts.  The mesh path never routes through the dual-tree
+    control plane (it is host-side and unsharded), so this pins the two
+    large-n strategies — shard the all-pairs stages vs. switch algorithms —
+    to the same fixed point."""
+    _run("""
+    import numpy as np, dataclasses
+    from repro import engine
+    from repro.core import multi
+
+    rng = np.random.default_rng(5)
+    c = rng.uniform(-10, 10, size=(6, 6))
+    x = (c[rng.integers(0, 6, 1536)] +
+         rng.normal(0, 1.0, size=(1536, 6))).astype(np.float32)
+
+    kmax = 8
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((8,), ("data",))
+    mesh_plan = engine.resolve_plan("mesh", mesh=mesh)
+    assert mesh_plan.sharded, "mesh plan did not shard on 8 fake devices"
+    m_mesh = multi.fit_msts(x, kmax, plan=mesh_plan)
+
+    single = engine.resolve_plan("single")
+    dt = dataclasses.replace(single, candidate_method="dualtree")
+    m_dt = multi.fit_msts(x, kmax, plan=dt)
+    assert m_dt.graph.stats.get("path") == "dualtree"
+
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(m_mesh.mst_w), axis=1),
+        np.sort(np.asarray(m_dt.mst_w), axis=1),
+    )
+    """)

@@ -1,0 +1,149 @@
+"""Property-based checks of the dual-tree traversal machinery (hypothesis;
+skipped if not installed).
+
+These pin the three facts the oracle-parity harness relies on:
+
+  * node-pair distance bounds are SOUND — lb2 <= true min pairwise d2 <= ub2
+    for every node pair of the fair-split tree, at any leaf size;
+  * the kNN traversal's pruning never drops a true neighbour — its candidate
+    output contains the exact f64 top-k distance multiset per point, so a
+    pruned node pair provably held no candidate-improving point;
+  * the Borůvka candidate graph spans and supports a full-weight MST — the
+    exact MST over ``candidate_edges`` output equals the exact MST over the
+    complete mrd_kmax graph (f64 Prim), including on duplicate-heavy and
+    collinear inputs where mutual-reachability ties are pervasive.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import dualtree  # noqa: E402
+
+
+@st.composite
+def point_sets(draw):
+    """Point clouds biased toward degeneracy: quantized coordinates create
+    duplicates; d=1 embedded in d>=1 gives collinear runs."""
+    n = draw(st.integers(10, 72))
+    d = draw(st.integers(1, 3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=draw(st.floats(0.5, 8.0)), size=(n, d))
+    mode = draw(st.integers(0, 2))
+    if mode == 1:       # duplicate-heavy: snap to a coarse grid
+        x = np.round(x * 2) / 2
+    elif mode == 2:     # collinear: one informative axis
+        x[:, 1:] = 0.0
+    return np.ascontiguousarray(x)
+
+
+def _brute_knn_d2(x: np.ndarray, k: int) -> np.ndarray:
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    return np.sort(d2, axis=1)[:, :k]
+
+
+def _mrd2(x: np.ndarray, cd2: np.ndarray) -> np.ndarray:
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    return np.maximum(d2, np.maximum(cd2[:, None], cd2[None, :]))
+
+
+def _prim_mst_weight(w: np.ndarray) -> float:
+    """Total MST weight of a dense symmetric weight matrix (exact, f64)."""
+    n = len(w)
+    in_tree = np.zeros(n, bool)
+    best = np.full(n, np.inf)
+    in_tree[0] = True
+    best = np.minimum(best, w[0])
+    best[0] = np.inf
+    total = 0.0
+    for _ in range(n - 1):
+        j = int(np.argmin(best))
+        total += best[j]
+        in_tree[j] = True
+        best = np.where(in_tree, np.inf, np.minimum(best, w[j]))
+    return total
+
+
+@given(point_sets(), st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_node_pair_bounds_sound(x, leaf_size):
+    ix = dualtree.build_index(x, np.zeros(len(x)), leaf_size=leaf_size)
+    tree = ix.tree
+    n_nodes = tree.n_nodes
+    U, V = np.meshgrid(np.arange(n_nodes), np.arange(n_nodes), indexing="ij")
+    U, V = U.ravel(), V.ravel()
+    ns = U != V
+    U, V = U[ns], V[ns]
+    lb2 = dualtree.node_pair_lb2(ix, U, V)
+    ub2 = dualtree.node_pair_ub2(ix, U, V)
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    for u, v, lo, hi in zip(U, V, lb2, ub2):
+        pu = tree.perm[tree.start[u]:tree.end[u]]
+        pv = tree.perm[tree.start[v]:tree.end[v]]
+        true_min = d2[np.ix_(pu, pv)].min()
+        assert lo <= true_min * (1 + 1e-12) + 1e-12
+        assert true_min <= hi * (1 + 1e-12) + 1e-12
+
+
+@given(point_sets(), st.integers(1, 8), st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_knn_traversal_never_drops_a_neighbour(x, k, leaf_size):
+    """The candidate rows contain the exact top-k: the pruned node pairs held
+    no improving point.  (Compared as distance multisets — at a tied kth
+    boundary any tied member is an equally correct candidate.)"""
+    k = min(k, len(x) - 1)
+    cand = dualtree.knn_candidates(x, k, leaf_size=leaf_size)
+    assert cand.shape == (len(x), k)
+    assert (cand >= 0).all()
+    ref = _brute_knn_d2(x, k)
+    for i, row in enumerate(cand):
+        got = np.sort(((x[row] - x[i]) ** 2).sum(-1))
+        np.testing.assert_allclose(got, ref[i], rtol=1e-12, atol=1e-12)
+
+
+@given(point_sets(), st.integers(2, 8), st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_boruvka_candidates_support_exact_mst(x, kmax, leaf_size):
+    kmax = min(kmax, len(x) - 1)
+    k = kmax - 1
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    knn_d2 = np.sort(d2, axis=1)[:, :k]
+    knn_idx = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    cd2 = knn_d2[:, -1]
+
+    edges, stats = dualtree.candidate_edges(
+        x, knn_d2, knn_idx, leaf_size=leaf_size
+    )
+    assert stats["m_candidates"] == len(edges)
+    assert (edges[:, 0] < edges[:, 1]).all()
+
+    w = _mrd2(x, cd2)
+    np.fill_diagonal(w, np.inf)
+    # exact MST over the candidate graph == exact MST over the complete graph
+    w_cand = np.full_like(w, np.inf)
+    w_cand[edges[:, 0], edges[:, 1]] = w[edges[:, 0], edges[:, 1]]
+    w_cand[edges[:, 1], edges[:, 0]] = w[edges[:, 1], edges[:, 0]]
+    total_cand = _prim_mst_weight(w_cand)
+    total_full = _prim_mst_weight(w)
+    assert np.isfinite(total_cand)  # candidate graph spans
+    np.testing.assert_allclose(total_cand, total_full, rtol=1e-12)
+
+
+@given(point_sets())
+@settings(max_examples=15, deadline=None)
+def test_node_agg_matches_bruteforce(x):
+    ix = dualtree.build_index(x, np.zeros(len(x)), leaf_size=3)
+    tree = ix.tree
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=len(x))
+    agg_min = dualtree.node_agg(ix, vals, np.minimum)
+    agg_max = dualtree.node_agg(ix, vals, np.maximum)
+    for node in range(tree.n_nodes):
+        pts = tree.perm[tree.start[node]:tree.end[node]]
+        assert agg_min[node] == vals[pts].min()
+        assert agg_max[node] == vals[pts].max()

@@ -1,0 +1,118 @@
+"""Regression guard for the ``is np.inf`` bug class (PR 4) and pinning of
+the float comparisons that are INTENTIONALLY exact.
+
+An ``is np.inf`` identity check is False for any *computed* inf (only the
+module-level singleton matches), so it silently falls through to the generic
+branch — the dbcv misrouting fixed in PR 4.  The lint test here keeps the
+whole class out of ``src/``; the other tests pin the two deliberate exact
+comparisons the audit found, so a future "fix" doesn't relax them:
+
+  * ``rng.filter_cascade_device``'s core-distance certificate
+    ``w2 == max(cd_a, cd_b)``: ``w2`` is literally ``max(d2, cd_a, cd_b)``
+    of the same float values, so when a core distance dominates, the bit
+    pattern round-trips and exact equality is the *correct* test (an eps
+    band would certify near-misses that are not provably RNG edges).
+  * Borůvka's ``wc == wmin[component]`` re-read: a float written to an
+    array and compared against itself is exact by IEEE-754; the comparison
+    selects edges achieving the recorded component minimum.
+"""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro import engine  # noqa: E402
+from repro.core import mrd, rng  # noqa: E402
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+def test_no_identity_comparison_with_float_singletons():
+    """``is np.inf`` / ``is np.nan`` never appears in src/ (the PR-4 bug
+    class: identity is False for any computed inf/nan).  AST-based so
+    docstrings describing the bug don't trip it."""
+    import ast
+
+    def is_float_singleton(node):
+        return (
+            isinstance(node, ast.Attribute)
+            and node.attr in ("inf", "nan")
+            and isinstance(node.value, ast.Name)
+            and node.value.id in ("np", "numpy", "math", "jnp")
+        )
+
+    offenders = []
+    for py in sorted(SRC.rglob("*.py")):
+        tree = ast.parse(py.read_text())
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            sides = [node.left, *node.comparators]
+            for i, op in enumerate(node.ops):
+                if isinstance(op, (ast.Is, ast.IsNot)) and (
+                    is_float_singleton(sides[i])
+                    or is_float_singleton(sides[i + 1])
+                ):
+                    offenders.append(f"{py.relative_to(SRC)}:{node.lineno}")
+    assert not offenders, "\n".join(offenders)
+
+
+def test_identity_check_is_false_for_computed_inf():
+    """The failure mode itself, pinned: a computed inf is == np.inf but is
+    NOT the singleton, so only value/isinf checks may guard inf branches."""
+    computed = np.float64("inf")
+    assert computed == np.inf and np.isinf(computed)
+    assert computed is not np.inf
+
+
+def test_rng_certificate_exact_equality_is_sound():
+    """The core-distance certificate fires exactly when a core distance
+    dominates the edge (w2 == max(cd) bit-for-bit), and never when the
+    pairwise distance strictly dominates."""
+    # 1-D layout: a dense clump [0, .1, .2, .3] plus a far point at 100.
+    # With k=2 core distances, clump<->far edges are cd-dominated on the
+    # far point's side; intra-clump edges are d2- or cd-dominated per pair.
+    x = jnp.asarray([[0.0], [0.1], [0.2], [0.3], [100.0]], jnp.float32)
+    n = 5
+    d2 = np.asarray((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    knn_d2 = np.sort(d2, axis=1)[:, :2].astype(np.float32)
+    knn_idx = np.argsort(d2, axis=1)[:, :2].astype(np.int32)
+    cd2k = knn_d2[:, -1]
+
+    lo, hi = np.triu_indices(n, 1)
+    plan = engine.resolve_plan("auto")
+    keep, certified, inside_any, d2_e, w2 = rng.filter_cascade_device(
+        x,
+        jnp.asarray(knn_d2),
+        jnp.asarray(knn_idx),
+        jnp.asarray(knn_d2),
+        jnp.asarray(lo, jnp.int32),
+        jnp.asarray(hi, jnp.int32),
+        jnp.ones(len(lo), bool),
+        plan=plan,
+    )
+    certified = np.asarray(certified)
+    w2 = np.asarray(w2)
+    expect = np.maximum(d2_e, np.maximum(cd2k[lo], cd2k[hi]))
+    np.testing.assert_array_equal(w2, np.asarray(expect, np.float32))
+    # certificate == "a core distance attains the max", bitwise
+    dominated = w2 == np.maximum(cd2k[lo], cd2k[hi])
+    np.testing.assert_array_equal(certified, dominated)
+    assert dominated.any() and not dominated.all()
+
+
+def test_mrd_max_roundtrips_core_distance_bits():
+    """mrd2_from_parts returns the dominating core distance's exact bit
+    pattern (jnp.maximum selects, never recomputes) — the property the
+    certificate's exact equality relies on."""
+    d2 = jnp.asarray([1.0, 2.5], jnp.float32)
+    ca = jnp.asarray([3.7000003, 0.5], jnp.float32)  # odd mantissas
+    cb = jnp.asarray([0.25, 1.1920929e-7], jnp.float32)
+    w2 = np.asarray(mrd.mrd2_from_parts(d2, ca, cb))
+    assert w2[0] == np.float32(3.7000003)
+    assert w2[1] == np.float32(2.5)

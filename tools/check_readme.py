@@ -36,6 +36,8 @@ BENCH_REQUIRED_FIELDS = [
     "serve.batch", "serve.n_queries", "serve.p50_ms", "serve.p95_ms",
     "serve.queries_per_s", "serve.mean_batch",
     "artifact.save_ms", "artifact.load_ms", "artifact.bytes",
+    "nscale.sizes", "nscale.d", "nscale.kmax", "nscale.rows",
+    "nscale.slope_candidates",
 ]
 
 
@@ -57,6 +59,9 @@ def check_bench_schema(path: Path) -> list[str]:
                 missing.append(dotted)
                 break
             node = node[part]
+    ns = doc.get("nscale")
+    if isinstance(ns, dict) and 100000 not in (ns.get("sizes") or []):
+        missing.append("nscale.sizes: 100000 (the routine large-n row)")
     return missing
 
 
